@@ -1,0 +1,75 @@
+"""Benchmark helpers: timing, the paper's layer set, modeled-TPU time."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import synth_feature_map, window_stats
+
+# v5e-class constants (same as the dry-run roofline)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def time_fn(f, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time (us) of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(f(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def modeled_tpu_us(c, h, w, o, kh, kw, stride, occupancy: float, dtype_bytes=2) -> dict:
+    """Roofline-modeled TPU time for dense vs block-ECR conv of one map.
+
+    dense: max(MAC-time, HBM-time) with all channel blocks.
+    ecr:   same with only `occupancy` fraction of channel blocks (DMA+MXU both
+           skip dead blocks — the kernel's gathered schedule).
+    """
+    oh, ow = (h - kh) // stride + 1, (w - kw) // stride + 1
+    macs = 2 * oh * ow * o * c * kh * kw
+    bytes_dense = (c * h * w + o * c * kh * kw + o * oh * ow) * dtype_bytes
+    t_dense = max(macs / PEAK_FLOPS, bytes_dense / HBM_BW) * 1e6
+    bytes_ecr = (occupancy * c * h * w + occupancy * o * c * kh * kw + o * oh * ow) * dtype_bytes
+    t_ecr = max(occupancy * macs / PEAK_FLOPS, bytes_ecr / HBM_BW) * 1e6
+    return {"dense_us": t_dense, "ecr_us": t_ecr,
+            "speedup": t_dense / max(t_ecr, 1e-12)}
+
+
+def feature_map_with_sparsity(key, c, h, w, sparsity):
+    return synth_feature_map(key, (c, h, w), sparsity)
+
+
+# paper Table III layer set: (network, layer, size, sparsity, C, O, k)
+TABLE3_LAYERS = [
+    ("LeNet", "Conv2", 11, 0.95, 6, 16, 5),
+    ("AlexNetC", "Conv3", 6, 0.90, 192, 384, 3),
+    ("AlexNetI", "Conv4", 5, 0.90, 384, 256, 3),
+    ("GoogLeNet", "Incep4a.1", 14, 0.90, 480, 192, 3),
+    ("GoogLeNet", "Incep4a.2", 14, 0.90, 96, 208, 3),
+    ("GoogLeNet", "Incep4e.3", 14, 0.90, 160, 320, 3),
+    ("GoogLeNet", "Incep5a.1", 7, 0.95, 832, 256, 3),
+    ("GoogLeNet", "Incep5a.2", 7, 0.90, 160, 320, 3),
+    ("GoogLeNet", "Incep5b.3", 7, 0.95, 192, 384, 3),
+    ("GoogLeNet", "Incep4a.7", 7, 0.95, 512, 128, 3),
+]
+
+# paper Fig. 2 sparsity curve for VGG-19 conv inputs (approximate red curve)
+VGG19_SPARSITY = [0.00, 0.35, 0.45, 0.45, 0.55, 0.60, 0.65, 0.65,
+                  0.70, 0.72, 0.75, 0.75, 0.78, 0.80, 0.82, 0.85]
+
+# VGG-19 conv shapes at half resolution (CPU-budget; MACs reported at full)
+VGG19_CONVS = []
+_res, _cin = 112, 3
+for _stage, (_c, _n) in enumerate(((64, 2), (128, 2), (256, 4), (512, 4), (512, 4))):
+    for _i in range(_n):
+        VGG19_CONVS.append((f"conv_{len(VGG19_CONVS)+1}", _cin, _c, _res))
+        _cin = _c
+    _res //= 2

@@ -1,0 +1,13 @@
+"""Paper Fig. 10: convolution with strides 2 and 3 on the VGG-19 set."""
+from benchmarks.fig9_vgg19 import rows
+
+
+def main():
+    # a representative subset (every other layer) at strides 2 and 3
+    for stride in (2, 3):
+        for r in rows(stride, layers=range(0, 16, 2)):
+            print(f"{r['name'].replace('fig9', 'fig10')},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Fig. 3: share of data-transfer time in conv+pool, per VGG-19 CP group.
+
+The paper measures CPU<->GPU PCIe transfer vs compute with cuDNN-style
+separate kernels. The TPU mapping (DESIGN.md §2): the equivalent traffic is
+(a) host->HBM once per network input (amortized), and (b) HBM<->VMEM between
+the unfused conv and pool stages. We model both from the layer shapes and the
+roofline constants and report the transfer share that PECR's fusion removes."""
+from __future__ import annotations
+
+from benchmarks._util import HBM_BW, PEAK_FLOPS, VGG19_CONVS
+from repro.core.pecr import fused_traffic_bytes
+
+PCIE_BW = 16e9  # the paper's platform-1 PCIe3 x16-class link
+
+CP_GROUPS = [(1, "CP_1"), (3, "CP_2"), (7, "CP_3"), (11, "CP_4"), (15, "CP_5")]
+
+
+def main():
+    for idx, label in CP_GROUPS:
+        name, c, o, res = VGG19_CONVS[idx]
+        res *= 2  # model at full VGG resolution
+        macs = 2 * (res - 2) ** 2 * o * c * 9
+        t_compute = macs / PEAK_FLOPS
+        tr = fused_traffic_bytes((c, res, res), o, 3, 3, dtype_bytes=2)
+        # unfused: conv out -> HBM -> pool in (the removable intermediate)
+        t_hbm_intermediate = 2 * o * (res - 2) ** 2 * 2 / HBM_BW
+        # the paper's regime: the same intermediate crossing PCIe to the CPU
+        t_pcie_intermediate = 2 * o * (res - 2) ** 2 * 2 / PCIE_BW
+        share_gpu_paper = t_pcie_intermediate / (t_pcie_intermediate + t_compute)
+        share_tpu = t_hbm_intermediate / (t_hbm_intermediate + t_compute)
+        print(f"fig3/{label},0.0,paper_pcie_transfer_share={share_gpu_paper:.2f} "
+              f"tpu_hbm_transfer_share={share_tpu:.2f} "
+              f"fused_saved_frac={tr['saved_frac']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Fig. 9: per-conv-layer comparison on VGG-19 (ECR vs dense vs im2col).
+
+The paper's y-metric is wall-clock speedup over cuDNN-FAST per layer; here we
+report measured CPU wall times for the three algorithm paths plus the paper's
+MAC-reduction metric and the modeled-TPU speedup, per layer, at the Fig. 2
+sparsity schedule."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from benchmarks._util import VGG19_CONVS, VGG19_SPARSITY, modeled_tpu_us, time_fn
+from repro.core import conv2d, synth_feature_map, window_stats
+from repro.kernels.ecr_conv.ops import channel_block_occupancy
+
+
+def rows(stride: int = 1, layers=None):
+    out = []
+    sel = layers if layers is not None else range(len(VGG19_CONVS))
+    for i in sel:
+        name, c, o, res = VGG19_CONVS[i]
+        sp = VGG19_SPARSITY[i]
+        x = synth_feature_map(jax.random.PRNGKey(i), (c, res, res), sp)
+        k = jax.random.normal(jax.random.PRNGKey(100 + i), (o, c, 3, 3)) * 0.05
+        t = {}
+        for impl in ("dense", "im2col", "ecr"):
+            f = jax.jit(partial(conv2d, stride=stride, impl=impl))
+            t[impl] = time_fn(f, x, k, iters=2, warmup=1)
+        st = window_stats(jax.device_get(x), 3, 3, stride)
+        occ = channel_block_occupancy(x, 8, compact=True)  # the kernel's schedule
+        m = modeled_tpu_us(c, res, res, o, 3, 3, stride, occ)
+        out.append({
+            "name": f"fig9/{name}/s{stride}",
+            "us_per_call": t["ecr"],
+            "derived": (f"dense_us={t['dense']:.0f} im2col_us={t['im2col']:.0f} "
+                        f"sparsity={sp:.2f} mac_red={st.mul_reduction:.2f} "
+                        f"occ_compacted={occ:.2f} tpu_model_speedup={m['speedup']:.2f}"),
+        })
+    return out
+
+
+def main(stride: int = 1):
+    for r in rows(stride):
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

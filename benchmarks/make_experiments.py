@@ -1,0 +1,93 @@
+"""Regenerate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+experiments/dryrun/*.json (run after the dry-run grid)."""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DRY = ROOT / "experiments" / "dryrun"
+EXP = ROOT / "EXPERIMENTS.md"
+
+
+def _recs(mesh):
+    out = []
+    for p in sorted(DRY.glob(f"*__{mesh}.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def dryrun_table() -> str:
+    lines = []
+    for mesh in ("16x16", "2x16x16"):
+        recs = _recs(mesh)
+        if not recs:
+            continue
+        n_ok = sum(r.get("status") == "ok" for r in recs)
+        n_skip = sum(r.get("status") == "skipped" for r in recs)
+        n_err = len(recs) - n_ok - n_skip
+        lines.append(f"\n**Mesh {mesh}** — {n_ok} compiled, {n_skip} skipped "
+                     f"(per assignment), {n_err} errors.\n")
+        lines.append("| arch | shape | compile s | arg GB/dev | temp GB/dev | "
+                     "HLO GFLOP/dev | HBM GB/dev | coll GB/dev |")
+        lines.append("|---|---|---|---|---|---|---|---|")
+        for r in recs:
+            if r.get("status") == "skipped":
+                lines.append(f"| {r['arch']} | {r['shape']} | SKIP | | | | | |")
+                continue
+            if r.get("status") != "ok":
+                lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+                continue
+            ma = r.get("memory_analysis", {})
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f} | "
+                f"{ma.get('argument_size_in_bytes', 0)/1e9:.2f} | "
+                f"{ma.get('temp_size_in_bytes', 0)/1e9:.2f} | "
+                f"{r['hlo_flops_per_device']/1e9:.0f} | "
+                f"{r['hlo_bytes_per_device']/1e9:.0f} | "
+                f"{r['collectives']['total_bytes']/1e9:.1f} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    lines = ["\n| arch | shape | compute s | memory s | collective s | dominant | "
+             "useful | roofline frac | w/ pallas-flash |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in _recs("16x16"):
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP (sub-quadratic-only shape) | | | |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        dom = max(r["compute_term_s"], r["memory_term_s"], r["collective_term_s"])
+        frac = r["compute_term_s"] / dom if dom else 0.0
+        pf = r.get("pallas_flash")
+        if pf:
+            dom_p = max(r["compute_term_s"], pf["memory_term_pallas_s"], r["collective_term_s"])
+            pcol = f"mem {pf['memory_term_pallas_s']:.2f}s → frac {r['compute_term_s']/dom_p:.2f}"
+        else:
+            pcol = ""
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_term_s']:.3f} | "
+            f"{r['memory_term_s']:.3f} | {r['collective_term_s']:.3f} | "
+            f"{r['dominant_term']} | {r['useful_flop_ratio']:.2f} | {frac:.3f} | {pcol} |")
+    return "\n".join(lines)
+
+
+def inject(md: str, marker: str, content: str) -> str:
+    pat = re.compile(rf"<!-- {marker} -->.*?(?=\n## |\Z)", re.S)
+    return pat.sub(f"<!-- {marker} -->\n{content}\n", md)
+
+
+def main():
+    md = EXP.read_text()
+    md = inject(md, "DRYRUN_TABLE", dryrun_table())
+    md = inject(md, "ROOFLINE_TABLE", roofline_table())
+    EXP.write_text(md)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

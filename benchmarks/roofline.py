@@ -1,0 +1,57 @@
+"""§Roofline report: renders the per-(arch x shape x mesh) table from the
+dry-run JSONs in experiments/dryrun/ (see repro.launch.dryrun)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DRY = ROOT / "experiments" / "dryrun"
+
+
+def load_records(mesh: str | None = None):
+    recs = []
+    for p in sorted(DRY.glob("*.json")):
+        r = json.loads(p.read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def render_table(mesh: str = "16x16") -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant | "
+            "MODEL/HLO flops | compile s |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in load_records(mesh):
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP: "
+                        f"{r['reason'][:60]}… | — | — |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR {r.get('error','')[:50]} | | | | | |")
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_term_s']:.3f} | "
+            f"{r['memory_term_s']:.3f} | {r['collective_term_s']:.3f} | "
+            f"{r['dominant_term']} | {r['useful_flop_ratio']:.2f} | {r['compile_s']:.0f} |")
+    return "\n".join(rows)
+
+
+def main():
+    for mesh in ("16x16", "2x16x16"):
+        recs = load_records(mesh)
+        if not recs:
+            continue
+        ok = [r for r in recs if r.get("status") == "ok"]
+        for r in ok:
+            mfu_proxy = r["compute_term_s"] / max(
+                r["compute_term_s"], r["memory_term_s"], r["collective_term_s"])
+            print(f"roofline/{r['arch']}/{r['shape']}/{mesh},0.0,"
+                  f"compute={r['compute_term_s']:.3f}s memory={r['memory_term_s']:.3f}s "
+                  f"collective={r['collective_term_s']:.3f}s dom={r['dominant_term']} "
+                  f"roofline_frac={mfu_proxy:.3f}")
+
+
+if __name__ == "__main__":
+    main()

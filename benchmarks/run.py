@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Wall times are CPU (this
+container); the paper-metric (MAC reduction) and modeled-TPU columns carry the
+cross-platform story — see EXPERIMENTS.md §Paper-claims."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        fig2_sparsity,
+        fig3_traffic,
+        fig9_vgg19,
+        fig10_strides,
+        fig11_theta,
+        fig12_pecr,
+        kernels_micro,
+        roofline,
+        table3_single_layer,
+    )
+
+    modules = [
+        ("table3", table3_single_layer),
+        ("fig2", fig2_sparsity),
+        ("fig3", fig3_traffic),
+        ("fig9", fig9_vgg19),
+        ("fig10", fig10_strides),
+        ("fig11", fig11_theta),
+        ("fig12", fig12_pecr),
+        ("kernels", kernels_micro),
+        ("roofline", roofline),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        if only and name != only:
+            continue
+        t0 = time.time()
+        mod.main()
+        print(f"_meta/{name}_wall_s,{(time.time()-t0)*1e6:.0f},benchmark module wall time")
+
+
+if __name__ == "__main__":
+    main()

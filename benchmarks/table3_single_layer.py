@@ -1,0 +1,51 @@
+"""Paper Table III: single-conv-layer ECR vs dense on the extracted layers.
+
+Columns: measured CPU wall time (jitted jnp, NOT comparable to the paper's
+GTX1080 numbers), the paper's own metric (MAC reduction from zero skipping),
+and the modeled-TPU block-ECR speedup from the roofline constants (this is the
+number the Pallas kernel targets; the paper's speedups are wall-clock cuDNN
+ratios on GPU)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._util import TABLE3_LAYERS, modeled_tpu_us, time_fn
+from repro.core import conv2d, synth_feature_map, window_stats
+from repro.kernels.ecr_conv.ops import channel_block_occupancy
+
+
+def rows():
+    out = []
+    for net, layer, size, sp, c, o, k in TABLE3_LAYERS:
+        key = jax.random.PRNGKey(hash((net, layer)) % 2**31)
+        x = synth_feature_map(key, (c, size, size), sp)
+        kern = jax.random.normal(jax.random.PRNGKey(1), (o, c, k, k)) * 0.1
+        dense = jax.jit(partial(conv2d, stride=1, impl="dense"))
+        ecr = jax.jit(partial(conv2d, stride=1, impl="ecr"))
+        t_dense = time_fn(dense, x, kern, iters=2, warmup=1)
+        t_ecr = time_fn(ecr, x, kern, iters=2, warmup=1)
+        st = window_stats(jax.device_get(x), k, k, 1)
+        occ_raw = channel_block_occupancy(x, 8)  # without compaction
+        occ = channel_block_occupancy(x, 8, compact=True)  # the kernel's schedule
+        m = modeled_tpu_us(c, size, size, o, k, k, 1, occ)
+        out.append({
+            "name": f"table3/{net}.{layer}",
+            "us_per_call": t_ecr,
+            "derived": (f"sparsity={sp} dense_us={t_dense:.0f} "
+                        f"mac_red={st.mul_reduction:.2f} occ_raw={occ_raw:.2f} "
+                        f"occ_compacted={occ:.2f} "
+                        f"tpu_model_speedup={m['speedup']:.2f}"),
+        })
+    return out
+
+
+def main():
+    for r in rows():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""End-to-end driver: train a ~100M-parameter qwen3-family model for a few
+hundred steps on CPU, with the full production stack — sharded state (host
+mesh), grad accumulation, async checkpointing, fault-tolerant supervisor
+(a failure is injected mid-run to demonstrate restore), straggler monitor.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import logging
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, _REGISTRY, _REDUCED
+from repro.launch.train import train
+
+logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+# ~100M-parameter member of the qwen3 family (DESIGN.md: reduced configs keep
+# the family's structure — GQA + qk_norm + tied embeddings)
+QWEN3_100M = dataclasses.replace(
+    get_config("qwen3-0.6b"),
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+    d_ff=2048, vocab_size=32768, attn_chunk=256,
+)
+_REGISTRY["qwen3-100m"] = QWEN3_100M
+_REDUCED["qwen3-100m"] = QWEN3_100M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    args = ap.parse_args()
+    n = sum(p.size for p in jax.tree_util.tree_leaves(
+        __import__("repro.models.model", fromlist=["model"]).init_params(
+            QWEN3_100M, jax.random.PRNGKey(0))[0]))
+    print(f"model: qwen3-100m ({n/1e6:.0f}M params)")
+    state, history = train(
+        "qwen3-100m", steps=args.steps, reduced=True,
+        global_batch=args.global_batch, seq_len=args.seq_len, grad_accum=2,
+        ckpt_dir="/tmp/repro_train_lm", checkpoint_every=50,
+        fail_at=(125,),  # injected node failure -> restore from step-100 ckpt
+        resume=False,
+    )
+    print(f"first loss {history[0]['loss']:.3f} -> final loss {history[-1]['loss']:.3f}")
+    assert history[-1]["loss"] < history[0]["loss"]
+
+
+if __name__ == "__main__":
+    main()

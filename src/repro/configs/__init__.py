@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    DEFAULT_RUN,
+    SHAPES,
+    ModelConfig,
+    RunConfig,
+    ShapeConfig,
+    get_config,
+    list_archs,
+    shape_applicable,
+)
+
+__all__ = [
+    "DEFAULT_RUN",
+    "SHAPES",
+    "ModelConfig",
+    "RunConfig",
+    "ShapeConfig",
+    "get_config",
+    "list_archs",
+    "shape_applicable",
+]

@@ -1,0 +1,54 @@
+"""vgg19_sparse [cnn] — the paper's own evaluation network (VGG-19), with the
+conv+pool stacks runnable through the dense, ECR-sparse, and PECR-fused paths.
+
+This is the 11th ("paper's own") architecture; it is not part of the 40 LM
+dry-run cells but has its own configs, smoke tests and benchmarks (Figs 9-12).
+"""
+from dataclasses import dataclass, field
+
+from repro.configs.base import ModelConfig, register
+
+# VGG-19 conv plan: (out_channels, n_convs) per stage; 2x2 maxpool after each.
+VGG19_PLAN = ((64, 2), (128, 2), (256, 4), (512, 4), (512, 4))
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str = "vgg19"
+    in_channels: int = 3
+    img_size: int = 224
+    plan: tuple = VGG19_PLAN
+    kernel_size: int = 3
+    pool_size: int = 2
+    n_classes: int = 1000
+    conv_impl: str = "dense"  # dense | ecr | pecr  (paper's three paths)
+
+
+FULL = ModelConfig(
+    name="vgg19-sparse",
+    family="cnn",
+    n_layers=16,  # 16 conv layers
+    d_model=512,
+    n_heads=1,
+    n_kv_heads=1,
+    d_ff=4096,
+    vocab_size=1000,  # classes
+    attn_type="none",
+)
+
+REDUCED = ModelConfig(
+    name="vgg19-sparse",
+    family="cnn",
+    n_layers=4,
+    d_model=32,
+    n_heads=1,
+    n_kv_heads=1,
+    d_ff=64,
+    vocab_size=16,
+    attn_type="none",
+)
+
+register(FULL, REDUCED)
+
+CNN_FULL = CNNConfig()
+CNN_REDUCED = CNNConfig(name="vgg-tiny", img_size=32, plan=((8, 1), (16, 1)), n_classes=16)

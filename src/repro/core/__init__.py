@@ -1,0 +1,30 @@
+"""The paper's contribution as a composable library.
+
+- ECR sparse convolution (paper §IV): `repro.core.ecr`
+- PECR fused conv+ReLU+pool (paper §V): `repro.core.pecr`
+- Sparsity machinery shared with the LM stack: `repro.core.sparsity`
+- The technique lifted to FFNs: `repro.core.sparse_ffn`
+"""
+from repro.core.ecr import ECR, conv2d, conv2d_dense, conv2d_ecr, conv2d_im2col, ecr_compress, ecr_spmv
+from repro.core.pecr import PECR, conv_pool, conv_pool_pecr, conv_pool_unfused, pecr_compress, pecr_conv_pool
+from repro.core.sparsity import block_occupancy, compact_block_ids, synth_feature_map, window_stats
+
+__all__ = [
+    "ECR",
+    "PECR",
+    "block_occupancy",
+    "compact_block_ids",
+    "conv2d",
+    "conv2d_dense",
+    "conv2d_ecr",
+    "conv2d_im2col",
+    "conv_pool",
+    "conv_pool_pecr",
+    "conv_pool_unfused",
+    "ecr_compress",
+    "ecr_spmv",
+    "pecr_compress",
+    "pecr_conv_pool",
+    "synth_feature_map",
+    "window_stats",
+]

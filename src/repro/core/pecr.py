@@ -1,0 +1,150 @@
+"""PECR (Pooling-pack ECR): fused convolution + ReLU + max-pool — paper §V.
+
+Algorithm 3 packs, per *pooling* window, the `p_w*p_h` convolution windows that
+feed one pooled output (Data/Index/Count); Algorithm 4 runs the SpMV for each
+packed conv window, applies ReLU, and max-reduces in registers so the conv
+result never touches off-chip memory.
+
+Functional port: `pecr_compress` builds (n_pool_windows, p*p, C*kh*kw) packed
+tensors; `pecr_conv_pool` consumes them. The fused-traffic claim is what
+matters on TPU — realized for real in `repro.kernels.conv_pool` (single
+pallas_call, pooled tile is the only HBM write); here we provide the faithful
+oracle + the byte accounting used by `benchmarks/fig12_pecr.py`.
+
+Note: paper Algorithm 3 line 11 stores ``Index[cnt] <- i*j+i``; the worked
+figures require ``i*k_w+j`` (row-major tap index). We implement the corrected
+form; the equivalence property test pins this against direct convolution.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ecr import conv2d_dense
+from repro.core.sparsity import extract_windows
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("data", "index", "count"),
+    meta_fields=("out_shape",),
+)
+@dataclass
+class PECR:
+    data: jax.Array  # (n_pool, p*p, K) nonzero activations, packed front
+    index: jax.Array  # (n_pool, p*p, K) kernel-tap indices for each value
+    count: jax.Array  # (n_pool, p*p) nonzeros per conv window
+    out_shape: tuple  # (n_poh, n_pow)
+
+
+@partial(jax.jit, static_argnames=("kh", "kw", "c_s", "p", "p_s"))
+def pecr_compress(x: jax.Array, kh: int, kw: int, c_s: int = 1, p: int = 2, p_s: int | None = None) -> PECR:
+    """Algorithm 3, vectorized. One row of `data` = one pooling unit."""
+    if x.ndim == 2:
+        x = x[None]
+    p_s = p if p_s is None else p_s  # pooling stride (paper uses p_s == p or 1)
+    wins = extract_windows(x, kh, kw, c_s)  # (oh, ow, K) conv windows
+    oh, ow, K = wins.shape
+    n_poh = (oh - p) // p_s + 1
+    n_pow = (ow - p) // p_s + 1
+    # gather the p*p conv windows per pooling unit
+    ph = jnp.arange(n_poh) * p_s
+    pw = jnp.arange(n_pow) * p_s
+    dh, dw = jnp.meshgrid(jnp.arange(p), jnp.arange(p), indexing="ij")
+
+    def pool_unit(i, j):
+        rows = wins[i + dh.reshape(-1), j + dw.reshape(-1)]  # (p*p, K)
+        return rows
+
+    packed = jax.vmap(lambda i: jax.vmap(lambda j: pool_unit(i, j))(pw))(ph)
+    packed = packed.reshape(-1, p * p, K)
+    nz = packed != 0
+    order = jnp.argsort(~nz, axis=-1, stable=True)
+    data = jnp.take_along_axis(packed, order, axis=-1)
+    index = jnp.take_along_axis(
+        jnp.broadcast_to(jnp.arange(K, dtype=jnp.int32), packed.shape), order, axis=-1
+    )
+    count = nz.sum(-1).astype(jnp.int32)
+    lane = jnp.arange(K)[None, None, :]
+    data = jnp.where(lane < count[..., None], data, 0)
+    return PECR(data=data, index=index, count=count, out_shape=(n_poh, n_pow))
+
+
+@jax.jit
+def pecr_conv_pool(pecr: PECR, kernel: jax.Array) -> jax.Array:
+    """Algorithm 4: per pooling unit, p*p SpMVs -> ReLU -> max."""
+    kvec = kernel.reshape(-1)
+    taps = kvec[pecr.index]  # (n_pool, p*p, K)
+    lane = jnp.arange(pecr.data.shape[-1])[None, None, :]
+    live = lane < pecr.count[..., None]
+    conv = jnp.sum(jnp.where(live, pecr.data * taps, 0.0), axis=-1)  # (n_pool, p*p)
+    conv = jnp.maximum(conv, 0.0)  # ReLU, paper §V-D
+    pooled = conv.max(axis=-1)
+    return pooled.reshape(pecr.out_shape)
+
+
+# ---------------------------------------------------------------------------
+# Public fused entry points
+# ---------------------------------------------------------------------------
+
+
+def conv_pool_pecr(x, kernels, c_s: int = 1, p: int = 2, p_s: int | None = None):
+    """(C,H,W) x (O,C,kh,kw) -> (O, n_poh, n_pow) fused conv+ReLU+maxpool."""
+    if kernels.ndim == 3:
+        kernels = kernels[None]
+    o, c, kh, kw = kernels.shape
+    pecr = pecr_compress(x, kh, kw, c_s, p, p_s)
+
+    def per_out(kern):
+        return pecr_conv_pool(pecr, kern)
+
+    return jax.vmap(per_out)(kernels)
+
+
+def conv_pool_unfused(x, kernels, c_s: int = 1, p: int = 2, p_s: int | None = None):
+    """Baseline: dense conv -> materialize -> ReLU -> maxpool (separate ops)."""
+    p_s = p if p_s is None else p_s
+    conv = conv2d_dense(x, kernels, c_s)
+    conv = jnp.maximum(conv, 0.0)
+    return jax.lax.reduce_window(
+        conv,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, p, p),
+        window_strides=(1, p_s, p_s),
+        padding="VALID",
+    )
+
+
+def conv_pool(x, kernels, c_s=1, p=2, p_s=None, impl="unfused"):
+    if impl == "unfused":
+        return conv_pool_unfused(x, kernels, c_s, p, p_s)
+    if impl == "pecr":
+        return conv_pool_pecr(x, kernels, c_s, p, p_s)
+    if impl == "pecr_pallas":
+        from repro.kernels.conv_pool.ops import fused_conv_pool
+
+        return fused_conv_pool(x, kernels, c_s, p, p_s)
+    raise ValueError(f"unknown conv_pool impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# Traffic accounting (paper Fig. 3 / Fig. 12 argument, in bytes)
+# ---------------------------------------------------------------------------
+
+
+def fused_traffic_bytes(x_shape, o, kh, kw, c_s=1, p=2, dtype_bytes=4) -> dict:
+    """Model HBM traffic of fused vs unfused conv+pool for one layer."""
+    c, h, w = x_shape
+    oh, ow = (h - kh) // c_s + 1, (w - kw) // c_s + 1
+    poh, pow_ = oh // p, ow // p
+    read_x = c * h * w * dtype_bytes
+    read_k = o * c * kh * kw * dtype_bytes
+    conv_out = o * oh * ow * dtype_bytes
+    pool_out = o * poh * pow_ * dtype_bytes
+    unfused = read_x + read_k + conv_out + conv_out + pool_out  # write conv, re-read conv
+    fused = read_x + read_k + pool_out
+    return {"unfused_bytes": unfused, "fused_bytes": fused, "saved_frac": 1 - fused / unfused}

@@ -1,0 +1,60 @@
+"""The paper's technique lifted to transformer FFNs (DESIGN.md §4).
+
+ReLU-family MLPs (minitron's squared-ReLU here; cf. Shi & Chu 2017, which the
+paper builds on) produce activation tensors h = act(x @ W1) with exact zeros.
+The down-projection h @ W2 is then a sparse x dense matmul with *data-dependent*
+sparsity — structurally identical to ECR's compress-then-SpMV:
+
+  occupancy(h, block)          == Ptr        (block granularity)
+  compact_block_ids(occupancy) == F_data     (packed live-block list)
+  bsr_matmul(h, W2, ids, cnt)  == Algorithm 2 SpMV
+
+Inside the pjit'd model forward we keep the *dense-equivalent* formulation
+(mask-and-matmul — numerically identical, SPMD-friendly); the actual skipping
+is realized by `repro.kernels.bsr_matmul` and measured in the kernel
+benchmarks. `sparse_ffn_stats` feeds the roofline's "useful FLOPs" accounting.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import block_occupancy
+
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu":
+        return jax.nn.relu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def sparse_ffn_apply(x, w1, w2, activation: str = "relu2", block=(8, 128)):
+    """x:(T,D) w1:(D,F) w2:(F,D). Returns (y, occupancy_fraction)."""
+    h = activation_fn(activation)(x @ w1)
+    t, f = h.shape
+    bt = block[0] if t % block[0] == 0 else 1
+    bf = block[1] if f % block[1] == 0 else f
+    occ = block_occupancy(h, (bt, bf))  # (T/bt, F/bf) bool
+    occ_e = jnp.repeat(jnp.repeat(occ, bt, 0), bf, 1)
+    h = jnp.where(occ_e, h, 0.0)  # dense-equivalent of block skipping
+    return h @ w2, occ.mean(dtype=jnp.float32)
+
+
+def sparse_ffn_stats(x, w1, activation: str = "relu2", block=(8, 128)) -> dict:
+    """Measured block/element sparsity of the FFN hidden state (roofline input)."""
+    h = activation_fn(activation)(x @ w1)
+    t, f = h.shape
+    bt = block[0] if t % block[0] == 0 else 1
+    bf = block[1] if f % block[1] == 0 else f
+    occ = block_occupancy(h, (bt, bf))
+    return {
+        "element_sparsity": float((h == 0).mean()),
+        "block_occupancy": float(occ.mean()),
+        "skippable_flop_frac": float(1.0 - occ.mean()),
+    }

@@ -1,0 +1,170 @@
+"""Sparsity machinery shared by the ECR/PECR paths and the LM-side reuse.
+
+The paper's "compression" step (Algorithm 1) counts and packs nonzero
+activations per convolution window. On TPU the profitable granularity is a
+*block* (DESIGN.md §2), so this module provides both:
+
+- element-wise window statistics (faithful to the paper; used by the oracle,
+  the MAC-reduction accounting, and the Θ = sparsity/size analysis), and
+- block occupancy bitmaps ((8,128)-aligned by default) consumed by the Pallas
+  kernels' scalar-prefetch grids and by the MoE dispatch (which is the same
+  "compact the nonzero blocks" scheduling problem).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Window extraction (the paper's "extension"; im2col without HBM round-trip)
+# ---------------------------------------------------------------------------
+
+
+def extract_windows(x: jax.Array, kh: int, kw: int, stride: int = 1) -> jax.Array:
+    """(C,H,W) -> (n_oh, n_ow, C*kh*kw) window matrix (im2col rows).
+
+    This materializes the paper Fig. 1 extension — used only by the reference
+    path and the GEMM baseline; the Pallas kernels form windows implicitly.
+    """
+    if x.ndim == 2:
+        x = x[None]
+    c, h, w = x.shape
+    n_oh = (h - kh) // stride + 1
+    n_ow = (w - kw) // stride + 1
+    # gather via dynamic slicing vmapped over output coords
+    oh = jnp.arange(n_oh) * stride
+    ow = jnp.arange(n_ow) * stride
+
+    def one(i, j):
+        win = jax.lax.dynamic_slice(x, (0, i, j), (c, kh, kw))
+        return win.reshape(-1)
+
+    return jax.vmap(lambda i: jax.vmap(lambda j: one(i, j))(ow))(oh)
+
+
+# ---------------------------------------------------------------------------
+# Element-wise (paper-faithful) sparsity statistics
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WindowStats:
+    """MAC accounting for one feature map, paper §IV-D / Fig. 6."""
+
+    n_windows: int
+    dense_muls: int
+    dense_adds: int
+    sparse_muls: int
+    sparse_adds: int
+    sparsity: float
+    theta: float  # paper Fig. 11: Θ = (sparsity*100) / feature-map width
+
+    @property
+    def mul_reduction(self) -> float:
+        return 1.0 - self.sparse_muls / max(self.dense_muls, 1)
+
+    @property
+    def add_reduction(self) -> float:
+        return 1.0 - self.sparse_adds / max(self.dense_adds, 1)
+
+
+def window_stats(x: np.ndarray, kh: int, kw: int, stride: int = 1) -> WindowStats:
+    x = np.asarray(x)
+    if x.ndim == 2:
+        x = x[None]
+    wins = np.asarray(extract_windows(jnp.asarray(x), kh, kw, stride))
+    nnz = (wins != 0).sum(-1).reshape(-1)
+    n_win = nnz.size
+    k = wins.shape[-1]
+    return WindowStats(
+        n_windows=int(n_win),
+        dense_muls=int(n_win * k),
+        dense_adds=int(n_win * (k - 1)),
+        sparse_muls=int(nnz.sum()),
+        sparse_adds=int(np.maximum(nnz - 1, 0).sum()),
+        sparsity=float((x == 0).mean()),
+        theta=float((x == 0).mean() * 100.0 / x.shape[-1]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Block occupancy (TPU-native granularity)
+# ---------------------------------------------------------------------------
+
+
+def block_occupancy(x: jax.Array, block: tuple[int, ...]) -> jax.Array:
+    """Boolean map: True where the corresponding block of `x` has any nonzero.
+
+    x is reshaped into blocks along its last len(block) dims (must divide).
+    Returns shape = blocked grid dims. This is ECR's `Ptr != -1` at block
+    granularity: the Pallas kernels prefetch it to skip dead blocks.
+    """
+    nb = len(block)
+    lead, tail = x.shape[: x.ndim - nb], x.shape[x.ndim - nb :]
+    for t, b in zip(tail, block):
+        if t % b:
+            raise ValueError(f"block {block} does not divide {tail}")
+    grid = tuple(t // b for t, b in zip(tail, block))
+    shp = lead + tuple(v for tb in zip(grid, block) for v in tb)
+    xr = x.reshape(shp)
+    # move block dims last and reduce them
+    perm = list(range(len(lead)))
+    perm += [len(lead) + 2 * i for i in range(nb)]
+    perm += [len(lead) + 2 * i + 1 for i in range(nb)]
+    xr = xr.transpose(perm)
+    return jnp.any(xr != 0, axis=tuple(range(len(lead) + nb, len(lead) + 2 * nb)))
+
+
+def compact_block_ids(occ: jax.Array, max_blocks: int | None = None):
+    """ECR compression at block granularity.
+
+    Given a 1-D occupancy vector, return (ids, count): `ids[i]` = index of the
+    i-th nonzero block (padded with the last valid id so gathers stay in
+    bounds) and `count` = number of live blocks. Mirrors F_data/Ptr: the kernel
+    loops `count` times over `ids` instead of over the full grid.
+    """
+    occ = occ.reshape(-1)
+    n = occ.shape[0] if max_blocks is None else max_blocks
+    order = jnp.argsort(~occ, stable=True)  # live blocks first, original order
+    count = occ.sum().astype(jnp.int32)
+    # pad with a valid index (order[0]) so downstream gathers stay in bounds;
+    # consumers mask by `count` exactly as Algorithm 2 masks by Ptr.
+    ids = jnp.where(jnp.arange(occ.shape[0]) < count, order, order[0])
+    return ids[:n].astype(jnp.int32), count
+
+
+def occupancy_fraction(occ: jax.Array) -> jax.Array:
+    return occ.mean(dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Feature-map dataset helpers (paper §VI-A provides a VGG-19 feature-map set)
+# ---------------------------------------------------------------------------
+
+
+def synth_feature_map(key, shape, sparsity: float, dtype=jnp.float32,
+                      channel_dead_frac: float | None = None) -> jax.Array:
+    """Random feature map with target sparsity — post-ReLU-like (non-negative).
+
+    Deep-layer sparsity in trained nets is partly *structured*: whole filters
+    die (ReLU + BN shift), which `benchmarks/fig2_sparsity.py` measures on a
+    VGG forward pass. `channel_dead_frac` controls how much of the target
+    sparsity comes from fully-dead channels (default: half); the remainder is
+    unstructured element sparsity. The TPU block-ECR win tracks the structured
+    part (DESIGN.md §2) — benchmarks report both bounds.
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    vals = jax.random.uniform(k1, shape, dtype, 1e-3, 1.0)
+    if len(shape) == 3 and shape[0] > 1:
+        cdf = sparsity * 0.5 if channel_dead_frac is None else channel_dead_frac
+        ch_keep = jax.random.uniform(k3, (shape[0], 1, 1)) >= cdf
+        # element sparsity on surviving channels to hit the overall target
+        resid = jnp.clip((sparsity - cdf) / jnp.maximum(1 - cdf, 1e-6), 0.0, 1.0)
+        keep = (jax.random.uniform(k2, shape) >= resid) & ch_keep
+    else:
+        keep = jax.random.uniform(k2, shape) >= sparsity
+    return jnp.where(keep, vals, 0.0).astype(dtype)

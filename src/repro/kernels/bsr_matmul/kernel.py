@@ -1,0 +1,80 @@
+"""Block-sparse (activation-sparse) matmul — ECR's compress-then-SpMV on the MXU.
+
+y = h @ w where h:(T,F) carries data-dependent *block* sparsity (post-ReLU FFN
+hidden states, dead channel blocks of feature maps, ...). The caller provides,
+per (bt)-row-block, the ECR-style compacted schedule:
+
+  ids:(nt,nf) int32 — ids[i,k] = index of the k-th LIVE f-block of row-block i,
+                      padded by repeating the last live id (no re-DMA: Pallas
+                      skips the copy when the mapped block index is unchanged);
+  cnt:(nt,)   int32 — number of live f-blocks (ECR's Ptr at block granularity).
+
+Grid = (nt, nd, nf), k innermost. The index_map gathers only live blocks
+(scalar prefetch), and `@pl.when(k < cnt[i])` bounds the reduction exactly as
+Algorithm 2 bounds its loop by Ptr — dead blocks cost neither DMA nor MXU
+cycles on real hardware. fp32 accumulation in VMEM scratch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, cnt_ref, h_ref, w_ref, o_ref, acc_ref, *, nf: int):
+    i = pl.program_id(0)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(k < cnt_ref[i])
+    def _mac():
+        acc_ref[...] += jnp.dot(
+            h_ref[...], w_ref[...], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k == nf - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def bsr_matmul_pallas(
+    h: jax.Array,
+    w: jax.Array,
+    ids: jax.Array,
+    cnt: jax.Array,
+    *,
+    block: tuple[int, int, int] = (8, 128, 128),
+    interpret: bool = True,
+    out_dtype=None,
+) -> jax.Array:
+    """h:(T,F) @ w:(F,D) with gathered live blocks. Shapes must divide blocks."""
+    from functools import partial
+
+    t, f = h.shape
+    f2, d = w.shape
+    assert f == f2, (h.shape, w.shape)
+    bt, bf, bd = block
+    assert t % bt == 0 and f % bf == 0 and d % bd == 0, (h.shape, w.shape, block)
+    nt, nf, nd = t // bt, f // bf, d // bd
+    assert ids.shape == (nt, nf) and cnt.shape == (nt,), (ids.shape, cnt.shape)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nt, nd, nf),
+        in_specs=[
+            pl.BlockSpec((bt, bf), lambda i, j, k, ids, cnt: (i, ids[i, k])),
+            pl.BlockSpec((bf, bd), lambda i, j, k, ids, cnt: (ids[i, k], j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bd), lambda i, j, k, ids, cnt: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bt, bd), jnp.float32)],
+    )
+    return pl.pallas_call(
+        partial(_kernel, nf=nf),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, d), out_dtype or h.dtype),
+        interpret=interpret,
+    )(ids, cnt, h, w)

@@ -1,0 +1,41 @@
+"""Jitted wrapper: ECR-style block compaction + pallas BSR matmul."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import block_occupancy
+from repro.kernels.bsr_matmul.kernel import bsr_matmul_pallas
+
+
+def block_schedule(h: jax.Array, bt: int, bf: int):
+    """Compute (ids, cnt) — the block-granularity ECR compression of h."""
+    occ = block_occupancy(h, (bt, bf))  # (nt, nf) bool
+    nt, nf = occ.shape
+    order = jnp.argsort(~occ, axis=1, stable=True).astype(jnp.int32)
+    cnt = occ.sum(1).astype(jnp.int32)
+    lane = jnp.arange(nf, dtype=jnp.int32)[None, :]
+    ids = jnp.where(lane < cnt[:, None], order, order[:, :1])
+    return ids, cnt
+
+
+@partial(jax.jit, static_argnames=("block", "interpret"))
+def sparse_matmul(h, w, block=(8, 128, 128), interpret: bool = True):
+    """y = h @ w skipping all-zero (bt,bf) blocks of h. Pads to block multiples."""
+    t, f = h.shape
+    f2, d = w.shape
+    bt, bf, bd = block
+    tp, fp, dp = (-t) % bt, (-f) % bf, (-d) % bd
+    hp = jnp.pad(h, ((0, tp), (0, fp)))
+    wp = jnp.pad(w, ((0, fp), (0, dp)))
+    ids, cnt = block_schedule(hp, bt, bf)
+    y = bsr_matmul_pallas(hp, wp, ids, cnt, block=block, interpret=interpret)
+    return y[:t, :d]
+
+
+def schedule_occupancy(h, bt: int = 8, bf: int = 128) -> float:
+    """Fraction of blocks that are live (== fraction of MXU work not skipped)."""
+    occ = block_occupancy(h, (bt, bf))
+    return float(occ.mean())

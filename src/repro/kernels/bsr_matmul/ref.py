@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the block-sparse matmul kernel."""
+import jax.numpy as jnp
+
+
+def bsr_matmul_ref(h, w, out_dtype=None):
+    """The dense-equivalent ground truth: zeros contribute zero."""
+    return jnp.dot(
+        h.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(out_dtype or h.dtype)
+
+
+def bsr_matmul_schedule_ref(h, w, ids, cnt, block, out_dtype=None):
+    """Executes the *schedule* (ids/cnt) literally — distinguishes schedule bugs
+    from kernel bugs: must equal bsr_matmul_ref when ids/cnt cover all live
+    blocks, by construction of ECR compaction."""
+    bt, bf, bd = block
+    t, f = h.shape
+    _, d = w.shape
+    nt, nf = t // bt, f // bf
+    out = jnp.zeros((t, d), jnp.float32)
+    for i in range(nt):
+        acc = jnp.zeros((bt, d), jnp.float32)
+        for k in range(int(cnt[i])):
+            fb = int(ids[i, k])
+            acc += h[i * bt : (i + 1) * bt, fb * bf : (fb + 1) * bf].astype(jnp.float32) @ w[
+                fb * bf : (fb + 1) * bf
+            ].astype(jnp.float32)
+        out = out.at[i * bt : (i + 1) * bt].set(acc)
+    return out.astype(out_dtype or h.dtype)

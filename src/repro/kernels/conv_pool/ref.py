@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused conv+ReLU+maxpool kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def conv_pool_ref(x_chw, kernels_oihw, stride: int = 1, pool: int = 2):
+    """(C,H,W) x (O,C,kh,kw) -> (O, oh//p, ow//p) fp32 ground truth."""
+    conv = jax.lax.conv_general_dilated(
+        x_chw[None].astype(jnp.float32),
+        kernels_oihw.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    conv = jnp.maximum(conv, 0.0)
+    o, oh, ow = conv.shape
+    poh, pow_ = oh // pool, ow // pool
+    conv = conv[:, : poh * pool, : pow_ * pool]
+    return conv.reshape(o, poh, pool, pow_, pool).max(axis=(2, 4))

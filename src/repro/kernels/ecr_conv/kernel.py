@@ -1,0 +1,93 @@
+"""ECR sparse convolution on TPU — paper §IV adapted per DESIGN.md §2.
+
+One `pallas_call` fuses what the GPU kernel fused: *extension* (windows are
+formed by index arithmetic on the VMEM-resident tile — the im2col matrix never
+exists), *compression* (the scalar-prefetched (ids, cnt) schedule — ECR's
+F_data/Ptr at channel-block granularity), and the *SpMV* (per kernel tap, a
+(OH*OW, bc) x (bc, bo) MXU contraction, accumulated in fp32 VMEM scratch).
+
+Dead channel-blocks of the input feature map (ReLU kills whole channels —
+measured in benchmarks/fig2_sparsity.py) are skipped: the gather index_map
+repeats the last live block (no DMA re-issue) and `@pl.when(k < cnt)` skips
+the MACs, exactly as Algorithm 2 bounds its loop by Ptr.
+
+Layouts: x (H, W, C) / w (kh, kw, C, O) / out (OH, OW, O); the whole spatial
+map is VMEM-resident per channel-block (the paper's shared-memory design —
+its regime is the small, deep, very sparse layers; ops.py shrinks bc to fit a
+VMEM budget for early layers). VALID padding; stride in {1,2,3} as evaluated
+by the paper (Figs 9-10).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, cnt_ref, x_ref, w_ref, o_ref, acc_ref, *, kh, kw, stride, n_cb, oh, ow):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(k < cnt_ref[0])
+    def _mac():
+        x = x_ref[...]  # (H, W, bc) — one channel block, full map (VMEM)
+        for i in range(kh):
+            for j in range(kw):
+                patch = jax.lax.slice(
+                    x,
+                    (i, j, 0),
+                    (i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, x.shape[2]),
+                    (stride, stride, 1),
+                )  # (oh, ow, bc): the T-th window row, never materialized in HBM
+                acc_ref[...] += jnp.dot(
+                    patch.reshape(oh * ow, -1),
+                    w_ref[i, j],
+                    preferred_element_type=jnp.float32,
+                )
+
+    @pl.when(k == n_cb - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].reshape(oh, ow, -1).astype(o_ref.dtype)
+
+
+def ecr_conv_pallas(
+    x: jax.Array,  # (H, W, C)
+    w: jax.Array,  # (kh, kw, C, O)
+    ids: jax.Array,  # (n_cb,) live channel-block gather list
+    cnt: jax.Array,  # (1,) number of live channel blocks
+    *,
+    stride: int = 1,
+    block_c: int = 128,
+    block_o: int = 128,
+    interpret: bool = True,
+    out_dtype=None,
+) -> jax.Array:
+    h, wd, c = x.shape
+    kh, kw, c2, o = w.shape
+    assert c == c2 and c % block_c == 0 and o % block_o == 0
+    oh = (h - kh) // stride + 1
+    ow = (wd - kw) // stride + 1
+    n_cb, n_ob = c // block_c, o // block_o
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_ob, n_cb),
+        in_specs=[
+            pl.BlockSpec((h, wd, block_c), lambda j, k, ids, cnt: (0, 0, ids[k])),
+            pl.BlockSpec((kh, kw, block_c, block_o), lambda j, k, ids, cnt: (0, 0, ids[k], j)),
+        ],
+        out_specs=pl.BlockSpec((oh, ow, block_o), lambda j, k, ids, cnt: (0, 0, j)),
+        scratch_shapes=[pltpu.VMEM((oh * ow, block_o), jnp.float32)],
+    )
+    return pl.pallas_call(
+        partial(_kernel, kh=kh, kw=kw, stride=stride, n_cb=n_cb, oh=oh, ow=ow),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((oh, ow, o), out_dtype or x.dtype),
+        interpret=interpret,
+    )(ids, cnt, x, w)

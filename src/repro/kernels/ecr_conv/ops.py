@@ -1,0 +1,72 @@
+"""Jitted wrapper: channel-block occupancy ("compression") + pallas ECR conv."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import block_occupancy, compact_block_ids
+from repro.kernels.ecr_conv.kernel import ecr_conv_pallas
+
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # conservative half of v5e VMEM for x tile
+
+
+def _pick_block_c(h: int, w: int, c: int, dtype_bytes: int = 4) -> int:
+    bc = 128
+    while bc > 8 and h * w * bc * dtype_bytes > VMEM_BUDGET_BYTES:
+        bc //= 2
+    return bc
+
+
+@partial(jax.jit, static_argnames=("stride", "interpret", "block_c", "block_o", "compact"))
+def ecr_conv(x_chw, kernels_oihw, stride: int = 1, interpret: bool = True,
+             block_c: int = 0, block_o: int = 128, compact: bool = True):
+    """(C,H,W) x (O,C,kh,kw) -> (O,oh,ow), skipping dead input channel blocks.
+
+    compact=True (default): ECR channel compaction first — live channels pack
+    into a dense prefix so unstructured channel death still becomes contiguous
+    skippable blocks (cnt = ceil(n_live / bc))."""
+    from repro.core.ecr import compact_live_channels
+
+    if x_chw.ndim == 2:
+        x_chw = x_chw[None]
+    if kernels_oihw.ndim == 3:
+        kernels_oihw = kernels_oihw[None]
+    c, h, w = x_chw.shape
+    o, c2, kh, kw = kernels_oihw.shape
+    if compact:
+        x_chw, kernels_oihw, n_live = compact_live_channels(x_chw, kernels_oihw)
+    bc = block_c or min(_pick_block_c(h, w, c), max(8, c))
+    bo = min(block_o, max(8, o))
+    cp, op = (-c) % bc, (-o) % bo
+    x = jnp.pad(x_chw, ((0, cp), (0, 0), (0, 0))).transpose(1, 2, 0)  # (H,W,C')
+    wk = jnp.pad(kernels_oihw, ((0, op), (0, cp), (0, 0), (0, 0))).transpose(2, 3, 1, 0)
+    n_cb = (c + cp) // bc
+    if compact:
+        ids = jnp.arange(n_cb, dtype=jnp.int32)  # identity: prefix is live
+        cnt = jnp.minimum((n_live + bc - 1) // bc, n_cb).astype(jnp.int32)
+    else:
+        occ = block_occupancy(x, (h, w, bc)).reshape(-1)  # (n_cb,)
+        ids, cnt = compact_block_ids(occ)
+    out = ecr_conv_pallas(
+        x, wk, ids, cnt[None], stride=stride, block_c=bc, block_o=bo,
+        interpret=interpret
+    )
+    return out.transpose(2, 0, 1)[:o]  # (O, oh, ow)
+
+
+def channel_block_occupancy(x_chw, block_c: int = 128, compact: bool = False) -> float:
+    """Fraction of live channel blocks = fraction of MXU/DMA work not skipped.
+
+    compact=True reports the post-channel-compaction occupancy the kernel
+    actually runs at: ceil(n_live / bc) / n_blocks."""
+    import math
+
+    c, h, w = x_chw.shape
+    bc = min(block_c, c) if c % min(block_c, c) == 0 else 1
+    if compact:
+        n_live = int(jnp.any(x_chw != 0, axis=(1, 2)).sum())
+        return math.ceil(n_live / bc) / math.ceil(c / bc)
+    occ = block_occupancy(x_chw.transpose(1, 2, 0), (h, w, bc))
+    return float(occ.mean())

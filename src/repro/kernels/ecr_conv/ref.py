@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the ECR conv kernel: dense VALID conv, NCHW semantics."""
+import jax
+import jax.numpy as jnp
+
+
+def ecr_conv_ref(x_chw, kernels_oihw, stride: int = 1):
+    """(C,H,W) x (O,C,kh,kw) -> (O,oh,ow) fp32 ground truth."""
+    out = jax.lax.conv_general_dilated(
+        x_chw[None].astype(jnp.float32),
+        kernels_oihw.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]

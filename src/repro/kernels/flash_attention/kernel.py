@@ -1,0 +1,311 @@
+"""Pallas flash attention (GQA-aware), forward + backward.
+
+This is the paper's PECR insight applied to attention (DESIGN.md §2): the
+(qc, kc) score tile never leaves VMEM — only Q, K, V stream in and O streams
+out, exactly like PECR's conv tile never reaching HBM. The dry-run roofline
+showed score-tile materialization dominating the memory term of every train
+cell; this kernel removes it (EXPERIMENTS.md §Perf iteration log).
+
+Layouts (ops.py reshapes from the model's (B,S,KV,G,D)):
+  q: (BKV, G, Sq, D)   k,v: (BKV, Sk, D)   out: (BKV, G, Sq, D)
+GQA is native: the k/v BlockSpecs ignore the G grid axis, so each kv block is
+DMA'd once per (q-block, group) pair without materializing repeated heads.
+
+Backward = standard two-pass flash: dq accumulates over k blocks; dk/dv
+accumulate over (g, q) blocks; scores are recomputed from (q, k, m, l) — no
+S^2 residuals. fp32 accumulators in VMEM scratch throughout.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _mask(qpos, kpos, causal: bool, kv_len):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if kv_len is not None:
+        m &= (kpos < kv_len)[None, :]
+    return m
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, m_sc, l_sc,
+                *, scale, causal, q_offset, kv_len, nk, qc, kc):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0] * scale  # (qc, D)
+    k = k_ref[0]  # (kc, D)
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (qc, kc)
+    qpos = q_offset + pl.program_id(2) * qc + jnp.arange(qc)
+    kpos = ki * kc + jnp.arange(kc)
+    s = jnp.where(_mask(qpos, kpos, causal, kv_len), s, NEG)
+    m_prev, l_prev = m_sc[...], l_sc[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_sc[...] = m_new
+    l_sc[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        m_ref[0, 0] = m_sc[...]
+        l_ref[0, 0] = l
+
+def flash_fwd_pallas(q, k, v, *, scale, causal, q_offset=0, kv_len=None,
+                     qc=256, kc=512, interpret=True):
+    """q:(BKV,G,Sq,D) k,v:(BKV,Sk,D) -> (out, m, l) with m,l:(BKV,G,Sq)."""
+    bkv, g, sq, d = q.shape
+    sk = k.shape[1]
+    qc = qc if sq % qc == 0 else sq
+    kc = kc if sk % kc == 0 else sk
+    nq, nk = sq // qc, sk // kc
+    grid = (bkv, g, nq, nk)
+    out_shapes = (
+        jax.ShapeDtypeStruct((bkv, g, sq, d), q.dtype),
+        jax.ShapeDtypeStruct((bkv, g, sq), jnp.float32),
+        jax.ShapeDtypeStruct((bkv, g, sq), jnp.float32),
+    )
+    kern = partial(_fwd_kernel, scale=scale, causal=causal, q_offset=q_offset,
+                   kv_len=kv_len, nk=nk, qc=qc, kc=kc)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, qc, d), lambda b, g_, qi, ki: (b, g_, qi, 0)),
+            pl.BlockSpec((1, kc, d), lambda b, g_, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, kc, d), lambda b, g_, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, qc, d), lambda b, g_, qi, ki: (b, g_, qi, 0)),
+            pl.BlockSpec((1, 1, qc), lambda b, g_, qi, ki: (b, g_, qi)),
+            pl.BlockSpec((1, 1, qc), lambda b, g_, qi, ki: (b, g_, qi)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((qc, d), jnp.float32),
+            pltpu.VMEM((qc,), jnp.float32),
+            pltpu.VMEM((qc,), jnp.float32),
+        ],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# quantized-KV forward (decode serving: int8 cache dequantized per-block in
+# VMEM — K/V stream from HBM at 1 byte/elem, §Perf decode lever)
+# ---------------------------------------------------------------------------
+
+
+def _fwd_q8_kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref, acc_ref, m_sc, l_sc,
+                   *, scale, causal, q_offset, kv_len, nk, qc, kc):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale
+    k = k_ref[0].astype(jnp.float32) * ks_ref[0][:, None]  # dequant in VMEM
+    v = v_ref[0].astype(jnp.float32) * vs_ref[0][:, None]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    qpos = q_offset + pl.program_id(2) * qc + jnp.arange(qc)
+    kpos = ki * kc + jnp.arange(kc)
+    s = jnp.where(_mask(qpos, kpos, causal, kv_len), s, NEG)
+    m_prev, l_prev = m_sc[...], l_sc[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_prev * alpha + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_sc[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_fwd_q8_pallas(q, k_q8, v_q8, k_scale, v_scale, *, scale, causal,
+                        q_offset=0, kv_len=None, qc=256, kc=512, interpret=True):
+    """q:(BKV,G,Sq,D) bf16/f32; k_q8/v_q8:(BKV,Sk,D) int8; scales:(BKV,Sk)."""
+    bkv, g, sq, d = q.shape
+    sk = k_q8.shape[1]
+    qc = qc if sq % qc == 0 else sq
+    kc = kc if sk % kc == 0 else sk
+    nq, nk = sq // qc, sk // kc
+    kern = partial(_fwd_q8_kernel, scale=scale, causal=causal, q_offset=q_offset,
+                   kv_len=kv_len, nk=nk, qc=qc, kc=kc)
+    return pl.pallas_call(
+        kern,
+        grid=(bkv, g, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, qc, d), lambda b, g_, qi, ki: (b, g_, qi, 0)),
+            pl.BlockSpec((1, kc, d), lambda b, g_, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, kc, d), lambda b, g_, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, kc), lambda b, g_, qi, ki: (b, ki)),
+            pl.BlockSpec((1, kc), lambda b, g_, qi, ki: (b, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qc, d), lambda b, g_, qi, ki: (b, g_, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((qc, d), jnp.float32),
+            pltpu.VMEM((qc,), jnp.float32),
+            pltpu.VMEM((qc,), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((bkv, g, sq, d), q.dtype),
+        interpret=interpret,
+    )(q, k_q8, v_q8, k_scale, v_scale)
+
+
+# ---------------------------------------------------------------------------
+# backward: dq pass (accumulate over k blocks)
+# ---------------------------------------------------------------------------
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dl_ref, dq_ref, acc,
+               *, scale, causal, q_offset, kv_len, nk, qc, kc):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    q = q_ref[0, 0] * scale
+    k = k_ref[0]
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    qpos = q_offset + pl.program_id(2) * qc + jnp.arange(qc)
+    kpos = ki * kc + jnp.arange(kc)
+    s = jnp.where(_mask(qpos, kpos, causal, kv_len), s, NEG)
+    p = jnp.exp(s - m_ref[0, 0][:, None]) / jnp.maximum(l_ref[0, 0], 1e-30)[:, None]
+    dp = jnp.dot(do_ref[0, 0].astype(jnp.float32),
+                 v.astype(jnp.float32).T, preferred_element_type=jnp.float32)
+    ds = p * (dp - dl_ref[0, 0][:, None])  # (qc, kc)
+    acc[...] += jnp.dot(ds.astype(k.dtype), k, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        dq_ref[0, 0] = (acc[...] * scale).astype(dq_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# backward: dk/dv pass (accumulate over g and q blocks)
+# ---------------------------------------------------------------------------
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dl_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc,
+                *, scale, causal, q_offset, kv_len, ng, nq, qc, kc):
+    gi = pl.program_id(2)
+    qi = pl.program_id(3)
+
+    @pl.when((gi == 0) & (qi == 0))
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[0, 0] * scale
+    k = k_ref[0]
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    qpos = q_offset + qi * qc + jnp.arange(qc)
+    kpos = pl.program_id(1) * kc + jnp.arange(kc)
+    s = jnp.where(_mask(qpos, kpos, causal, kv_len), s, NEG)
+    p = jnp.exp(s - m_ref[0, 0][:, None]) / jnp.maximum(l_ref[0, 0], 1e-30)[:, None]
+    do = do_ref[0, 0].astype(jnp.float32)
+    dv_acc[...] += jnp.dot(p.T.astype(do.dtype), do, preferred_element_type=jnp.float32)
+    dp = jnp.dot(do, v.astype(jnp.float32).T, preferred_element_type=jnp.float32)
+    ds = p * (dp - dl_ref[0, 0][:, None])
+    dk_acc[...] += jnp.dot(ds.T.astype(q.dtype), q, preferred_element_type=jnp.float32)
+
+    @pl.when((gi == ng - 1) & (qi == nq - 1))
+    def _flush():
+        # q was pre-scaled when forming ds, so dk = ds^T @ (scale*q) already
+        # carries the scale factor — no second multiplication here.
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def flash_bwd_pallas(q, k, v, out, m, l, do, *, scale, causal, q_offset=0,
+                     kv_len=None, qc=256, kc=512, interpret=True):
+    bkv, g, sq, d = q.shape
+    sk = k.shape[1]
+    qc = qc if sq % qc == 0 else sq
+    kc = kc if sk % kc == 0 else sk
+    nq, nk = sq // qc, sk // kc
+    # delta = rowsum(do * out) — tiny, compute in jnp
+    dl = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+
+    dq = pl.pallas_call(
+        partial(_dq_kernel, scale=scale, causal=causal, q_offset=q_offset,
+                kv_len=kv_len, nk=nk, qc=qc, kc=kc),
+        grid=(bkv, g, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, qc, d), lambda b, g_, qi, ki: (b, g_, qi, 0)),
+            pl.BlockSpec((1, kc, d), lambda b, g_, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, kc, d), lambda b, g_, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, 1, qc, d), lambda b, g_, qi, ki: (b, g_, qi, 0)),
+            pl.BlockSpec((1, 1, qc), lambda b, g_, qi, ki: (b, g_, qi)),
+            pl.BlockSpec((1, 1, qc), lambda b, g_, qi, ki: (b, g_, qi)),
+            pl.BlockSpec((1, 1, qc), lambda b, g_, qi, ki: (b, g_, qi)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qc, d), lambda b, g_, qi, ki: (b, g_, qi, 0)),
+        scratch_shapes=[pltpu.VMEM((qc, d), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v, do, m, l, dl)
+
+    dk, dv = pl.pallas_call(
+        partial(_dkv_kernel, scale=scale, causal=causal, q_offset=q_offset,
+                kv_len=kv_len, ng=g, nq=nq, qc=qc, kc=kc),
+        grid=(bkv, nk, g, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, qc, d), lambda b, ki, g_, qi: (b, g_, qi, 0)),
+            pl.BlockSpec((1, kc, d), lambda b, ki, g_, qi: (b, ki, 0)),
+            pl.BlockSpec((1, kc, d), lambda b, ki, g_, qi: (b, ki, 0)),
+            pl.BlockSpec((1, 1, qc, d), lambda b, ki, g_, qi: (b, g_, qi, 0)),
+            pl.BlockSpec((1, 1, qc), lambda b, ki, g_, qi: (b, g_, qi)),
+            pl.BlockSpec((1, 1, qc), lambda b, ki, g_, qi: (b, g_, qi)),
+            pl.BlockSpec((1, 1, qc), lambda b, ki, g_, qi: (b, g_, qi)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, kc, d), lambda b, ki, g_, qi: (b, ki, 0)),
+            pl.BlockSpec((1, kc, d), lambda b, ki, g_, qi: (b, ki, 0)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((kc, d), jnp.float32),
+            pltpu.VMEM((kc, d), jnp.float32),
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct(k.shape, k.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ),
+        interpret=interpret,
+    )(q, k, v, do, m, l, dl)
+    return dq, dk, dv

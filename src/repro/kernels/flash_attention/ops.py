@@ -1,0 +1,50 @@
+"""custom_vjp wrapper: differentiable Pallas flash attention (GQA layout)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_bwd_pallas, flash_fwd_pallas
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention_p(q, k, v, scale, causal, q_offset, kv_len, qc, kc):
+    out, _, _ = flash_fwd_pallas(q, k, v, scale=scale, causal=causal,
+                                 q_offset=q_offset, kv_len=kv_len, qc=qc, kc=kc)
+    return out
+
+
+def _fwd(q, k, v, scale, causal, q_offset, kv_len, qc, kc):
+    out, m, l = flash_fwd_pallas(q, k, v, scale=scale, causal=causal,
+                                 q_offset=q_offset, kv_len=kv_len, qc=qc, kc=kc)
+    return out, (q, k, v, out, m, l)
+
+
+def _bwd(scale, causal, q_offset, kv_len, qc, kc, res, do):
+    q, k, v, out, m, l = res
+    dq, dk, dv = flash_bwd_pallas(q, k, v, out, m, l, do, scale=scale,
+                                  causal=causal, q_offset=q_offset, kv_len=kv_len,
+                                  qc=qc, kc=kc)
+    return dq, dk, dv
+
+
+flash_attention_p.defvjp(_fwd, _bwd)
+
+
+def flash_mha(q, k, v, *, causal=True, scale=None, q_offset=0, kv_len=None,
+              qc=256, kc=512):
+    """Model-facing entry: q (B,Sq,KV,G,D), k/v (B,Sk,KV,D) -> (B,Sq,KV,G,D).
+
+    Folds (B,KV) into the kernel's BKV grid axis; GQA groups ride the G axis
+    so K/V blocks are never repeated in HBM.
+    """
+    b, sq, kvh, g, d = q.shape
+    sk = k.shape[1]
+    scale = d ** -0.5 if scale is None else scale
+    qk = q.transpose(0, 2, 3, 1, 4).reshape(b * kvh, g, sq, d)
+    kk = k.transpose(0, 2, 1, 3).reshape(b * kvh, sk, d)
+    vk = v.transpose(0, 2, 1, 3).reshape(b * kvh, sk, d)
+    out = flash_attention_p(qk, kk, vk, scale, causal, q_offset, kv_len, qc, kc)
+    return out.reshape(b, kvh, g, sq, d).transpose(0, 3, 1, 2, 4)

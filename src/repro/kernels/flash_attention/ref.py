@@ -1,0 +1,21 @@
+"""Oracle for the flash attention kernel: plain softmax attention in fp32."""
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, scale, causal, q_offset=0, kv_len=None):
+    """q:(BKV,G,Sq,D) k,v:(BKV,Sk,D) -> (BKV,G,Sq,D), fp32 math."""
+    bkv, g, sq, d = q.shape
+    sk = k.shape[1]
+    s = jnp.einsum("bgqd,bkd->bgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if kv_len is not None:
+        mask &= (kpos < kv_len)[None, :]
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bgqk,bkd->bgqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,65 @@
+"""HLO-text analysis: collective byte accounting for the roofline.
+
+cost_analysis() has FLOPs and HBM bytes but no collective traffic, so we parse
+the (post-SPMD, per-device) HLO and sum the result-shape bytes of every
+communication op. Ring-algorithm link-byte factors ((n-1)/n, etc.) are folded
+into the roofline constants rather than per-op here; what we record is the
+per-device payload entering the interconnect.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result bytes per collective kind from post-partitioning HLO text."""
+    by_kind: dict[str, int] = defaultdict(int)
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if " = " not in line:
+            continue
+        lhs, rhs = line.split(" = ", 1)
+        m = re.match(r"(\([^)]*\)|[\w\[\],{}/#\s]*?)\s*([\w-]+)\(", rhs)
+        if not m:
+            continue
+        op = m.group(2)
+        # strip -start/-done/-cycle fusion suffixes (async collectives)
+        base = op.replace("-start", "").replace("-done", "")
+        if base not in _COLLECTIVES:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        ty = m.group(1)
+        nbytes = _shape_bytes(ty)
+        by_kind[base] += nbytes
+        counts[base] += 1
+    total = sum(by_kind.values())
+    return {"bytes_by_kind": dict(by_kind), "counts": dict(counts), "total_bytes": total}

@@ -1,0 +1,101 @@
+"""Step functions: train_step (grad-accum + remat + AdamW) and serve steps.
+
+These are the exact functions the dry-run lowers and the trainer executes; no
+separate "dry-run model". Gradient accumulation is a lax.scan over microbatches
+(keeps both activation memory and HLO size independent of global batch) with
+fp32 (configurable) gradient accumulation; under GSPMD the per-microbatch
+gradient reduction becomes reduce-scatter against the FSDP-sharded params —
+the overlap-friendly structure XLA's latency-hiding scheduler needs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import model as M
+from repro.optim.adamw import OptState, adamw_update, init_opt_state
+from repro.optim.schedules import warmup_cosine
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: OptState
+
+
+def init_train_state(cfg: ModelConfig, run: RunConfig, key, dtype=None) -> TrainState:
+    dtype = dtype or jnp.dtype(run.param_dtype)
+    params, _ = M.init_params(cfg, key, dtype)
+    opt = init_opt_state(params, jnp.dtype(run.moment_dtype))
+    return TrainState(params=params, opt=opt)
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig, total_steps: int = 10_000,
+                    grad_shardings=None):
+    ga = run.grad_accum
+
+    def loss_fn(params, mb):
+        return M.lm_loss(cfg, params, mb, remat=run.remat)
+
+    def _constrain(grads):
+        # §Perf (arctic iteration B2): without this, GSPMD moves partial f32
+        # dW's into the FSDP-sharded accumulator via all-gather + slice;
+        # pinning the microbatch grads to the accumulator's sharding makes the
+        # reduction a reduce-scatter (the ZeRO-2 pattern), per microbatch.
+        if grad_shardings is None:
+            return grads
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, grads, grad_shardings)
+
+    def train_step(state: TrainState, batch: dict):
+        params = state.params
+        if ga > 1:
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(ga, x.shape[0] // ga, *x.shape[1:]), batch)
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(a.dtype), gsum, _constrain(grads))
+                return (gsum, lsum + loss), None
+
+            gzero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(acc, (gzero, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / ga, gsum)
+            loss = lsum / ga
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = _constrain(grads)
+
+        lr = warmup_cosine(state.opt.step, peak_lr=run.learning_rate,
+                           warmup_steps=run.warmup_steps, total_steps=total_steps)
+        new_params, new_opt, gnorm = adamw_update(
+            grads, state.opt, params, lr=lr, beta1=run.beta1, beta2=run.beta2,
+            weight_decay=run.weight_decay, grad_clip=run.grad_clip)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, run: RunConfig):
+    def prefill_step(params, caches, batch):
+        return M.prefill(cfg, params, caches, batch, remat="none")
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, run: RunConfig):
+    """One decode step: greedy next token against a seq_len cache."""
+
+    def serve_step(params, caches, batch, pos):
+        logits, new_caches = M.decode_step(cfg, params, caches, batch, pos)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, new_caches
+
+    return serve_step

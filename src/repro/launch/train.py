@@ -1,0 +1,120 @@
+"""Training launcher: mesh + sharded state + supervisor loop.
+
+CPU-scale entry point (examples use it with reduced configs); the same builder
+functions drive the production dry-run, so what compiles at 512 chips is what
+runs here. XLA latency-hiding/overlap flags are set for the TPU target.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+import os
+import time
+
+# compute/communication overlap: structural prerequisite flags for the TPU
+# target (harmless on CPU). Set before jax import in real deployments via env.
+os.environ.setdefault(
+    "LIBTPU_INIT_ARGS",
+    "--xla_enable_async_all_gather=true --xla_enable_async_collective_permute=true",
+)
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import DEFAULT_RUN, SHAPES, RunConfig, ShapeConfig, get_config
+from repro.checkpoint import CheckpointManager
+from repro.data import make_pipeline
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import TrainState, init_train_state, make_train_step
+from repro.models import model as M
+from repro.optim.adamw import init_opt_state
+from repro.parallel import sharding as S
+from repro.parallel.api import axis_rules
+from repro.runtime import FailureInjector, Supervisor
+
+log = logging.getLogger("repro.train")
+
+
+def build_trainer(cfg, run: RunConfig, shape: ShapeConfig, mesh, total_steps: int, seed=0):
+    """Returns (jitted train_step, initial sharded state)."""
+    with axis_rules(mesh, fsdp=run.fsdp):
+        pshard, pshapes = S.params_sharding(cfg, mesh, jnp.dtype(run.param_dtype))
+        oshard, _ = S.opt_sharding(cfg, mesh, run, pshapes)
+        state_shard = TrainState(params=pshard, opt=oshard)
+        specs = M.input_specs(cfg, shape, jnp.dtype(run.compute_dtype))
+        bshard = S.batch_sharding(specs, mesh)
+        metrics_shard = {k: NamedSharding(mesh, P()) for k in ("loss", "grad_norm", "lr")}
+        step_fn = jax.jit(
+            make_train_step(cfg, run, total_steps),
+            in_shardings=(state_shard, bshard),
+            out_shardings=(state_shard, metrics_shard),
+            donate_argnums=(0,),
+        )
+        init = jax.jit(
+            lambda key: init_train_state(cfg, run, key),
+            out_shardings=state_shard,
+        )
+        state = init(jax.random.PRNGKey(seed))
+    return step_fn, state
+
+
+def train(arch: str, *, steps: int = 100, reduced: bool = True,
+          global_batch: int = 8, seq_len: int = 128, grad_accum: int = 1,
+          ckpt_dir: str = "/tmp/repro_ckpt", checkpoint_every: int = 50,
+          fail_at: tuple = (), resume: bool = True, seed: int = 0,
+          model_axis: int = 1, log_every: int = 10):
+    cfg = get_config(arch, reduced=reduced)
+    run = DEFAULT_RUN.replace(grad_accum=grad_accum, checkpoint_every=checkpoint_every,
+                              remat="full")
+    shape = ShapeConfig("custom_train", seq_len, global_batch, "train")
+    mesh = make_host_mesh(model_axis)
+    step_fn, state = build_trainer(cfg, run, shape, mesh, steps, seed)
+    pipeline = make_pipeline(cfg, shape, seed=seed)
+    ckpt = CheckpointManager(ckpt_dir, keep=3)
+
+    start = 0
+    if resume and ckpt.latest_step() is not None:
+        restored, meta = ckpt.restore(state)
+        if restored is not None:
+            state, start = restored, int(meta["step"])
+            log.info("resumed from step %d", start)
+
+    sup = Supervisor(
+        train_step=step_fn, pipeline=pipeline, ckpt=ckpt,
+        checkpoint_every=checkpoint_every,
+        injector=FailureInjector(fail_at=tuple(fail_at)) if fail_at else None,
+    )
+    t0 = time.time()
+    state, history = sup.run(state, steps, start_step=start)
+    dt = time.time() - t0
+    if history:
+        for h in history[:: max(1, len(history) // 10)]:
+            log.info("step %4d loss %.4f", h["step"], h["loss"])
+        tok_s = shape.global_batch * shape.seq_len * len(history) / max(dt, 1e-9)
+        log.info("done: %d steps in %.1fs (%.0f tok/s), final loss %.4f",
+                 len(history), dt, tok_s, history[-1]["loss"])
+    return state, history
+
+
+def main():
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--full", action="store_true", help="full (non-reduced) config")
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args()
+    train(args.arch, steps=args.steps, reduced=not args.full,
+          global_batch=args.global_batch, seq_len=args.seq_len,
+          grad_accum=args.grad_accum, ckpt_dir=args.ckpt_dir,
+          resume=not args.no_resume, model_axis=args.model_axis)
+
+
+if __name__ == "__main__":
+    main()

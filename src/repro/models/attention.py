@@ -1,0 +1,344 @@
+"""Attention: chunked (flash-style) softmax attention, GQA, MLA, cross-attn.
+
+The chunked implementation scans over query and key blocks with running
+(max, denominator, accumulator) statistics so no (Sq, Sk) score matrix is ever
+materialized — required for the prefill_32k / train_4k shapes and remat-friendly
+(pure jnp, no kernel; the HLO stays small because both loops are lax.scan).
+
+MLA (deepseek-v2) uses the *absorbed* formulation: queries are projected into
+the kv-lora latent space, so the cache holds only (c_kv, k_rope) and attention
+runs as GQA with a single shared "kv head" of width kv_lora(+rope). The O(S)
+per-head key/value expansion of the naive form never happens.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Px, dense_init, ones_init, rms_norm, rope
+from repro.parallel.api import shard
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (pure jnp)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, causal: bool, scale: float, q_offset=0,
+                    q_chunk: int = 512, k_chunk: int = 1024, kv_len=None,
+                    save_memory: bool = True):
+    """q: (B,Sq,KV,G,Dk)  k: (B,Sk,KV,Dk)  v: (B,Sk,KV,Dv) -> (B,Sq,KV,G,Dv).
+
+    `q_offset` is the absolute position of q[0] (decode: the cache write pos);
+    `kv_len` masks keys at index >= kv_len (unwritten cache tail).
+
+    `save_memory` wraps each q-block in jax.checkpoint: without it, autodiff of
+    the kv scan stacks the (qc,kc) attention probabilities for EVERY chunk pair
+    (f32+bf16+mask — the dominant HBM term found by the dry-run roofline);
+    with it the backward recomputes per-chunk scores, which is the flash
+    backward pass.
+    """
+    b, sq, nkv, g, dk = q.shape
+    sk, dv = k.shape[1], v.shape[-1]
+    if os.environ.get("REPRO_ATTN_STUB"):
+        # dry-run instrumentation (§Perf): replace all S^2 attention work with
+        # a shape-preserving O(S) stand-in, so compiling with/without the stub
+        # measures the attention region's exact FLOP/byte share differentially
+        # (HLO metadata tags lose some transpose-synthesized backward ops).
+        out = jnp.broadcast_to(v.mean(axis=1)[:, None, :, None, :],
+                               (b, sq, nkv, g, dv)).astype(v.dtype)
+        return out
+    qc = q_chunk if sq % q_chunk == 0 else sq
+    kc = k_chunk if sk % k_chunk == 0 else sk
+    nq, nk = sq // qc, sk // kc
+    q = q * scale
+
+    def q_block(_, qi):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, qi * qc, qc, axis=1)
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(state, ki):
+            # named_scope INSIDE the body: remat/transpose paths keep inner
+            # scopes, so the dry-run can re-account fwd AND bwd to the kernel
+            with jax.named_scope("flash_attention"):
+                m, l, acc = state
+                k_blk = jax.lax.dynamic_slice_in_dim(k, ki * kc, kc, axis=1)
+                v_blk = jax.lax.dynamic_slice_in_dim(v, ki * kc, kc, axis=1)
+                s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                               preferred_element_type=jnp.float32)
+                k_pos = ki * kc + jnp.arange(kc)
+                mask = jnp.ones((qc, kc), bool)
+                if causal:
+                    mask &= q_pos[:, None] >= k_pos[None, :]
+                if kv_len is not None:
+                    mask &= (k_pos < kv_len)[None, :]
+                s = jnp.where(mask, s, _NEG)
+                m_new = jnp.maximum(m, s.max(-1))
+                p = jnp.exp(s - m_new[..., None])
+                alpha = jnp.exp(m - m_new)
+                l_new = l * alpha + p.sum(-1)
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk,
+                    preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, nkv, g, qc), _NEG, jnp.float32),
+            jnp.zeros((b, nkv, g, qc), jnp.float32),
+            jnp.zeros((b, nkv, g, qc, dv), jnp.float32),
+        )
+        kv = jax.checkpoint(kv_step, prevent_cse=False) if save_memory else kv_step
+        (m, l, acc), _ = jax.lax.scan(kv, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (b,kv,g,qc,dv)
+        return None, out.astype(v.dtype)
+
+    qb = jax.checkpoint(q_block, prevent_cse=False) if save_memory else q_block
+    # the named_scope tags this region in HLO metadata: the dry-run roofline
+    # re-accounts its HBM bytes to the Pallas flash kernel's streaming model
+    # (kernels/flash_attention — same math, score tiles stay in VMEM).
+    with jax.named_scope("flash_attention"):
+        _, outs = jax.lax.scan(qb, None, jnp.arange(nq))  # (nq,b,kv,g,qc,dv)
+    out = jnp.moveaxis(outs, 0, 3)  # (b,kv,g,nq,qc,dv)
+    return out.reshape(b, nkv, g, sq, dv).transpose(0, 3, 1, 2, 4)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, h, kv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": dense_init(ks[1], (d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": dense_init(ks[2], (d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": dense_init(ks[3], (h, hd, d), ("heads", "head_dim", "embed"), fan_in=h * hd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ones_init((hd,), (None,))
+        p["k_norm"] = ones_init((hd,), (None,))
+    if cross:
+        p["gate"] = Px(jnp.zeros((), jnp.float32), ())  # tanh-gated cross-attn
+    return p
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, KV, hd) — bf16/f32, or int8 when quantized
+    v: jax.Array
+    k_scale: Optional[jax.Array] = None  # (B, S_max, KV) per-token-head absmax
+    v_scale: Optional[jax.Array] = None
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    """dtype jnp.int8 -> quantized cache (§Perf decode lever: halves the
+    dominant cache-streaming term; dequant fuses into the attention region /
+    the Pallas flash kernel dequants per block in VMEM)."""
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (batch, max_len, kv, hd)
+    if dtype == jnp.int8:
+        return KVCache(k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+                       k_scale=jnp.zeros(shape[:3], jnp.float32),
+                       v_scale=jnp.zeros(shape[:3], jnp.float32))
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def cache_axes(quantized: bool) -> KVCache:
+    """Axes tree matching the cache instance (None scale fields drop out of
+    both pytrees consistently for the unquantized cache)."""
+    sc = ("batch", "cache_seq", "cache_kv") if quantized else None
+    return KVCache(k=("batch", "cache_seq", "cache_kv", "cache_hd"),
+                   v=("batch", "cache_seq", "cache_kv", "cache_hd"),
+                   k_scale=sc, v_scale=sc)
+
+
+CACHE_AXES = cache_axes(False)
+
+
+def _quantize_kv(x):
+    """(B,S,KV,hd) -> int8 values + (B,S,KV) scales (symmetric absmax)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def gqa_attention(p, x, *, cfg: ModelConfig, positions, causal=True,
+                  cache: Optional[KVCache] = None, write_pos=None,
+                  kv_src: Optional[jax.Array] = None):
+    """x: (B,S,D). kv_src: encoder/image states for cross-attention.
+
+    cache + write_pos: write k/v at write_pos, attend over the whole cache.
+    Returns (out, new_cache).
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = h // kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    src = x if kv_src is None else kv_src
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(src.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(src.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_theta and kv_src is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    # §Perf (arctic iterations B1/B3): when kv_heads cannot shard the model
+    # axis (8 kv vs 16-way TP), pad the query heads to the next TP multiple
+    # (56 -> 64: zero q-heads contribute nothing and are sliced off) and
+    # replicate KV heads (Megatron GQA-under-TP). Attention then runs fully
+    # head-sharded instead of all-gathering full-seq q/k/v over the model
+    # axis every layer. Train/prefill only — decode would materialize the
+    # repeated KV cache.
+    from repro.parallel.api import current_mesh
+
+    mesh = current_mesh()
+    msz = mesh.shape.get("model", 1) if mesh else 1
+    pad_g = 0
+    q = q.reshape(b, s, kv, g, hd)
+    if mesh is not None and s > 1 and cache is None and msz > 1 and kv % msz != 0:
+        h_pad = -(-h // msz) * msz  # ceil to TP multiple
+        if h_pad % kv == 0 and h_pad <= 2 * h:
+            g_pad = h_pad // kv
+            pad_g = g_pad - g
+            if pad_g:
+                q = jnp.concatenate(
+                    [q, jnp.zeros((b, s, kv, pad_g, hd), q.dtype)], axis=3)
+            k = shard(jnp.repeat(k, g_pad, axis=2), "batch", None, "heads", None)
+            v = shard(jnp.repeat(v, g_pad, axis=2), "batch", None, "heads", None)
+            q = shard(q.reshape(b, s, h_pad, 1, hd), "batch", None, "heads", None, None)
+            kv, g = h_pad, 1
+
+    kv_len = None
+    q_offset = 0
+    new_cache = None
+    if cache is not None and cache.k.dtype == jnp.int8:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        kc = jax.lax.dynamic_update_slice_in_dim(cache.k, kq, write_pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache.v, vq, write_pos, axis=1)
+        ksc = jax.lax.dynamic_update_slice_in_dim(cache.k_scale, ks, write_pos, axis=1)
+        vsc = jax.lax.dynamic_update_slice_in_dim(cache.v_scale, vs, write_pos, axis=1)
+        new_cache = KVCache(k=kc, v=vc, k_scale=ksc, v_scale=vsc)
+        with jax.named_scope("flash_attention"):  # dequant fuses into the kernel
+            k = _dequantize_kv(kc, ksc, x.dtype)
+            v = _dequantize_kv(vc, vsc, x.dtype)
+        kv_len = write_pos + s
+        q_offset = write_pos
+    elif cache is not None:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), write_pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), write_pos, axis=1)
+        new_cache = KVCache(k=kc, v=vc)
+        k, v = kc, vc
+        kv_len = write_pos + s
+        q_offset = write_pos
+    out = flash_attention(
+        q, k, v, causal=causal, scale=hd ** -0.5, q_offset=q_offset,
+        q_chunk=min(cfg.attn_chunk // 2, 512) or s, k_chunk=cfg.attn_chunk,
+        kv_len=kv_len,
+    )
+    if pad_g:  # drop the zero padding heads
+        out = out.reshape(b, s, cfg.n_kv_heads, -1, hd)[:, :, :, : h // cfg.n_kv_heads]
+    out = out.reshape(b, s, h, hd)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+    if "gate" in p:  # gated cross-attention (llama-vision style)
+        out = jnp.tanh(p["gate"].astype(out.dtype)) * out
+    return shard(out, "batch", "seq_sp", None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA block (deepseek-v2), absorbed formulation
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": dense_init(ks[0], (d, qr), ("embed", "q_lora")),
+        "w_uq": dense_init(ks[1], (qr, h, dn + dr), ("q_lora", "heads", "head_dim")),
+        "w_dkv": dense_init(ks[2], (d, r), ("embed", "kv_lora")),
+        "w_uk": dense_init(ks[3], (r, h, dn), ("kv_lora", "heads", "head_dim")),
+        "w_uv": dense_init(ks[4], (r, h, dv), ("kv_lora", "heads", "head_dim")),
+        "w_kr": dense_init(ks[5], (d, dr), ("embed", "head_dim")),
+        "w_o": dense_init(ks[6], (h, dv, d), ("heads", "head_dim", "embed"), fan_in=h * dv),
+        "q_norm": ones_init((qr,), (None,)),
+        "kv_norm": ones_init((r,), (None,)),
+    }
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array  # (B, S, r) compressed latent — the MLA cache-size win
+    k_rope: jax.Array  # (B, S, dr)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+    )
+
+
+MLA_CACHE_AXES = MLACache(c_kv=("batch", "cache_seq", None),
+                          k_rope=("batch", "cache_seq", None))
+
+
+def mla_attention(p, x, *, cfg: ModelConfig, positions, causal=True,
+                  cache: Optional[MLACache] = None, write_pos=None):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    cq = rms_norm(x @ p["w_dq"].astype(x.dtype), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsq,qhk->bshk", cq, p["w_uq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    # absorb W_uk: queries into latent space -> cache never expands per head
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, p["w_uk"].astype(x.dtype))
+    c_kv = rms_norm(x @ p["w_dkv"].astype(x.dtype), p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(x @ p["w_kr"].astype(x.dtype), positions, cfg.rope_theta)
+
+    kv_len, q_offset, new_cache = None, 0, None
+    if cache is not None:
+        ckv = jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_kv.astype(cache.c_kv.dtype), write_pos, axis=1)
+        krc = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, k_rope.astype(cache.k_rope.dtype), write_pos, axis=1)
+        new_cache = MLACache(c_kv=ckv, k_rope=krc)
+        c_kv, k_rope = ckv, krc
+        kv_len = write_pos + s
+        q_offset = write_pos
+    # single shared "kv head": keys = [c_kv ; k_rope], queries = [q_lat ; q_rope]
+    q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)[:, :, None]  # (B,S,1,H,r+dr)
+    k_eff = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None]  # (B,Sk,1,r+dr)
+    v_eff = c_kv[:, :, None]  # (B,Sk,1,r)
+    q_eff = q_eff.reshape(b, s, 1, h, r + dr)
+    # §Perf (deepseek): the 128 query heads shard the model axis (the shared
+    # latent kv head is tiny and replicates); without this constraint GSPMD
+    # replicated the whole absorbed attention over the model axis.
+    q_eff = shard(q_eff, "batch", None, None, "heads", None)
+    out_lat = flash_attention(
+        q_eff, k_eff, v_eff, causal=causal, scale=(dn + dr) ** -0.5,
+        q_offset=q_offset, q_chunk=min(cfg.attn_chunk // 2, 512) or s,
+        k_chunk=cfg.attn_chunk, kv_len=kv_len,
+    )  # (B,S,1,H,r)
+    out_lat = out_lat.reshape(b, s, h, r)
+    out = jnp.einsum("bshr,rhv->bshv", out_lat, p["w_uv"].astype(x.dtype))
+    out = jnp.einsum("bshv,hvd->bsd", out, p["w_o"].astype(x.dtype))
+    return shard(out, "batch", "seq_sp", None), new_cache

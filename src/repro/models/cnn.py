@@ -1,0 +1,126 @@
+"""CNNs for the paper's own evaluation: VGG-19 (+ reduced variants), with the
+conv stack runnable through every implementation the paper compares:
+
+  impl = "dense"       lax.conv + separate ReLU + separate maxpool (cuDNN stand-in)
+  impl = "im2col"      materialized extension + GEMM (paper §VII baseline)
+  impl = "ecr"         ECR sparse conv (paper §IV), unfused pooling
+  impl = "pecr"        ECR conv for in-stage layers + PECR fused conv+ReLU+pool
+                       for the stage-final layer (paper §V)
+  impl = "ecr_pallas" / "pecr_pallas"  same, through the Pallas TPU kernels
+
+All convs are 3x3 stride 1 with explicit 1-pixel padding (== SAME), pooling is
+2x2/2 max — the VGG-19 configuration the paper benchmarks (Figs 9, 12).
+
+Also holds the whisper conv frontend (a STUB for the assigned shapes; the
+dry-run feeds precomputed frame embeddings — this exists so the ECR conv has a
+real consumer in the audio arch and is exercised by unit tests).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.vgg19_sparse import CNNConfig
+from repro.core.ecr import conv2d
+from repro.core.pecr import conv_pool
+
+
+def init_cnn(key, ccfg: CNNConfig, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, 64)
+    ki = iter(keys)
+    stages = []
+    c_in = ccfg.in_channels
+    k = ccfg.kernel_size
+    for c_out, n_convs in ccfg.plan:
+        convs = []
+        for _ in range(n_convs):
+            w = jax.random.normal(next(ki), (c_out, c_in, k, k), dtype) * (c_in * k * k) ** -0.5
+            convs.append(w)
+            c_in = c_out
+        stages.append(convs)
+    # classifier dims from a shape-only trace
+    feat = jax.eval_shape(partial(_features, impl="dense", ccfg=ccfg),
+                          {"stages": stages},
+                          jax.ShapeDtypeStruct((ccfg.in_channels, ccfg.img_size, ccfg.img_size), dtype))
+    flat = feat.shape[0] * feat.shape[1] * feat.shape[2]
+    fc1 = jax.random.normal(next(ki), (flat, 512), dtype) * flat ** -0.5
+    fc2 = jax.random.normal(next(ki), (512, ccfg.n_classes), dtype) * 512 ** -0.5
+    return {"stages": stages, "fc1": fc1, "fc2": fc2}
+
+
+def _pad1(x):
+    return jnp.pad(x, ((0, 0), (1, 1), (1, 1)))
+
+
+def _features(params, img, *, impl: str, ccfg: CNNConfig):
+    """img: (C,H,W) -> (C_out, h, w) after all conv stages."""
+    x = img
+    p = ccfg.pool_size
+    for convs in params["stages"]:
+        for i, w in enumerate(convs):
+            last = i == len(convs) - 1
+            xp = _pad1(x)
+            if last and impl in ("pecr", "pecr_pallas"):
+                fused_impl = "pecr" if impl == "pecr" else "pecr_pallas"
+                x = conv_pool(xp, w, 1, p, None, fused_impl)  # conv+ReLU+pool fused
+            else:
+                conv_impl = {"pecr": "ecr", "pecr_pallas": "ecr_pallas"}.get(impl, impl)
+                x = jnp.maximum(conv2d(xp, w, 1, conv_impl), 0.0)
+                if last:
+                    o, oh, ow = x.shape
+                    x = x[:, : oh // p * p, : ow // p * p]
+                    x = x.reshape(o, oh // p, p, ow // p, p).max(axis=(2, 4))
+    return x
+
+
+def cnn_forward(params, img, impl: str = "dense", ccfg: CNNConfig = CNNConfig()):
+    """Single image (C,H,W) -> class logits. vmap for batches."""
+    x = _features(params, img, impl=impl, ccfg=ccfg)
+    x = x.reshape(-1)
+    x = jnp.maximum(x @ params["fc1"], 0.0)
+    return x @ params["fc2"]
+
+
+def cnn_feature_maps(params, img, ccfg: CNNConfig = CNNConfig()):
+    """The paper's data set (§VI-A): every feature map ENTERING a conv layer."""
+    maps = []
+    x = img
+    p = ccfg.pool_size
+    for convs in params["stages"]:
+        for i, w in enumerate(convs):
+            maps.append(x)
+            x = jnp.maximum(conv2d(_pad1(x), w, 1, "dense"), 0.0)
+            if i == len(convs) - 1:
+                o, oh, ow = x.shape
+                x = x[:, : oh // p * p, : ow // p * p]
+                x = x.reshape(o, oh // p, p, ow // p, p).max(axis=(2, 4))
+    return maps
+
+
+# ---------------------------------------------------------------------------
+# whisper conv frontend (STUB consumer of the ECR conv; not in the dry-run path)
+# ---------------------------------------------------------------------------
+
+
+def init_whisper_frontend(key, n_mels: int, d_model: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "conv1": jax.random.normal(k1, (d_model, n_mels, 3), dtype) * (n_mels * 3) ** -0.5,
+        "conv2": jax.random.normal(k2, (d_model, d_model, 3), dtype) * (d_model * 3) ** -0.5,
+    }
+
+
+def whisper_frontend(params, mel, stride2: bool = True):
+    """mel: (n_mels, T) -> (T//2, d_model) frame embeddings (gelu conv x2)."""
+    x = mel[None]  # (1, n_mels, T)
+    x = jax.lax.conv_general_dilated(
+        x, params["conv1"], window_strides=(1,), padding=((1, 1),),
+        dimension_numbers=("NCH", "OIH", "NCH"))
+    x = jax.nn.gelu(x)
+    x = jax.lax.conv_general_dilated(
+        x, params["conv2"], window_strides=((2,) if stride2 else (1,)), padding=((1, 1),),
+        dimension_numbers=("NCH", "OIH", "NCH"))
+    x = jax.nn.gelu(x)
+    return x[0].T  # (T', d_model)

@@ -1,0 +1,98 @@
+"""Shared layer primitives: params-with-logical-axes, norms, rope, inits."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Param leaves carry logical axis names; unzip before handing to the model.
+# ---------------------------------------------------------------------------
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("value",),
+    meta_fields=("axes",),
+)
+@dataclass
+class Px:
+    value: Any
+    axes: tuple
+
+    @property
+    def shape(self):
+        return self.value.shape
+
+
+def _is_px(x):
+    return isinstance(x, Px)
+
+
+def unzip_params(tree):
+    """tree-of-Px -> (values tree, logical-axes tree)."""
+    vals = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=_is_px)
+    axes = jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=_is_px)
+    return vals, axes
+
+
+def dense_init(key, shape, axes, dtype=jnp.float32, fan_in: Optional[int] = None) -> Px:
+    fi = fan_in or (shape[-2] if len(shape) >= 2 else shape[-1])
+    w = jax.random.normal(key, shape, dtype) * (fi ** -0.5)
+    return Px(w.astype(dtype), axes)
+
+
+def embed_init(key, shape, axes, dtype=jnp.float32) -> Px:
+    return Px(jax.random.normal(key, shape, dtype) * 0.02, axes)
+
+
+def ones_init(shape, axes, dtype=jnp.float32) -> Px:
+    return Px(jnp.ones(shape, dtype), axes)
+
+
+def zeros_init(shape, axes, dtype=jnp.float32) -> Px:
+    return Px(jnp.zeros(shape, dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, ..., d) rotated over last dim; positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    assert d % 2 == 0
+    freq = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)  # (d/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (B, S, d/2)
+    # broadcast ang to x's head dims: x (B, S, *H, d)
+    while ang.ndim < x.ndim:
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(n: int, d: int, dtype=jnp.float32):
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-jnp.arange(0, d, 2, dtype=jnp.float32) / d * jnp.log(10_000.0))
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(dtype)

@@ -1,0 +1,298 @@
+"""Public model API: init / forward / cache / decode for every assigned arch.
+
+All families go through one `forward`:
+  - LM (dense/moe/ssm/hybrid/vlm): token embed -> group stack -> logits
+  - audio (whisper): frame embeddings (frontend STUB input) -> encoder stack;
+    decoder stack with interleaved cross-attention; enc-dec caches for decode.
+
+Step semantics used by launch/ and the dry-run:
+  train:   forward(tokens) -> logits; loss vs labels
+  prefill: forward(tokens, caches, write_pos=0) -> logits + filled caches
+  decode:  forward(one token, caches, write_pos=pos) -> next-token logits
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.layers import Px, embed_init, ones_init, rms_norm, sinusoid_positions, unzip_params
+from repro.models.transformer import (
+    Sub,
+    group_layout,
+    init_group_caches,
+    init_groups,
+    n_groups,
+    stack_apply,
+)
+from repro.parallel.api import shard
+
+AUDIO_DEC_LAYOUT = [Sub("attn", "none"), Sub("cross", "dense")]
+AUDIO_ENC_LAYOUT = [Sub("attn", "dense")]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params_px(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 5)
+    d, v = cfg.d_model, cfg.vocab_size
+    p: dict[str, Any] = {
+        "embed": embed_init(ks[0], (v, d), ("vocab", "embed")),
+        "final_norm": ones_init((d,), (None,)),
+    }
+    if cfg.is_encoder_decoder:
+        p["enc_groups"] = init_groups(ks[1], cfg, AUDIO_ENC_LAYOUT, cfg.n_encoder_layers)
+        p["enc_norm"] = ones_init((d,), (None,))
+        p["groups"] = init_groups(ks[2], cfg, AUDIO_DEC_LAYOUT, cfg.n_layers)
+    else:
+        p["groups"] = init_groups(ks[1], cfg)
+    if not cfg.tie_embeddings:
+        p["unembed"] = embed_init(ks[3], (d, v), ("embed", "vocab"))
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    """Returns (params values tree, logical-axes tree)."""
+    px = init_params_px(cfg, key)
+    vals, axes = unzip_params(px)
+    vals = jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, vals)
+    return vals, axes
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32):
+    """(ShapeDtypeStruct tree, axes tree) — no allocation (for dry-run/analysis)."""
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0), dtype)[0])
+    return shapes, param_axes(cfg)
+
+
+def param_axes(cfg: ModelConfig):
+    """Logical-axes tree matching init_params' values tree (cheap, abstract)."""
+    px = jax.eval_shape(lambda: init_params_px(cfg, jax.random.PRNGKey(0)))
+    _, axes = unzip_params(px)
+    return axes
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    from repro.parallel.api import axes_leaves
+
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0))[0])
+    axes = param_axes(cfg)
+    total = 0
+    for s, a in zip(jax.tree_util.tree_leaves(shapes), axes_leaves(axes)):
+        n = math.prod(s.shape)
+        if active_only and isinstance(a, tuple) and "experts" in a:
+            n = int(n * cfg.top_k / max(cfg.n_experts, 1))
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """(cache tree, axes tree) for the decode/prefill stack."""
+    if cfg.is_encoder_decoder:
+        return init_group_caches(cfg, batch, max_len, dtype, AUDIO_DEC_LAYOUT, cfg.n_layers)
+    return init_group_caches(cfg, batch, max_len, dtype)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """(ShapeDtypeStruct cache tree, axes tree) without allocating."""
+    cache = jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype)[0])
+    # axes are shape-independent: take them from a tiny concrete instance
+    # (a decode_32k cache for a 480B arch is ~275GB — never allocate it here)
+    axes = init_cache(cfg, 1, 8, dtype)[1]
+    return cache, axes
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _logits(cfg, params, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = x @ w.astype(x.dtype)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return shard(logits, "batch", None, "vocab")
+
+
+def forward(cfg: ModelConfig, params, batch: dict, *, caches=None, write_pos=None,
+            remat: str = "none", return_hidden: bool = False):
+    """Returns (logits, new_caches, aux_loss); final-norm hidden states instead
+    of logits when return_hidden (the chunked-xent loss path)."""
+    wp = 0 if write_pos is None else write_pos
+    if cfg.is_encoder_decoder:
+        return _forward_encdec(cfg, params, batch, caches=caches, write_pos=wp,
+                               remat=remat, return_hidden=return_hidden)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    x = shard(x, "batch", "seq_sp", None)
+    positions = wp + jnp.arange(s)[None, :]
+    positions = jnp.broadcast_to(positions, (b, s))
+    kv_src = batch.get("img_embeds") if cfg.family == "vlm" else None
+    x, new_caches, aux = stack_apply(
+        params["groups"], x, cfg=cfg, positions=positions, caches=caches,
+        write_pos=write_pos, causal=True, kv_src=kv_src, remat=remat)
+    if return_hidden:
+        return rms_norm(x, params["final_norm"], cfg.norm_eps), new_caches, aux
+    return _logits(cfg, params, x), new_caches, aux
+
+
+def _forward_encdec(cfg, params, batch, *, caches, write_pos, remat,
+                    return_hidden: bool = False):
+    d = cfg.d_model
+    if "frames" in batch:  # frontend stub provides frame embeddings
+        fr = batch["frames"]
+        pe = sinusoid_positions(fr.shape[1], d, fr.dtype)
+        enc_x = shard(fr + pe[None], "batch", "seq_sp", None)
+        enc_pos = jnp.broadcast_to(jnp.arange(fr.shape[1])[None], fr.shape[:2])
+        enc_out, _, _ = stack_apply(
+            params["enc_groups"], enc_x, cfg=cfg, positions=enc_pos, causal=False,
+            remat=remat, layout=AUDIO_ENC_LAYOUT)
+        enc_out = rms_norm(enc_out, params["enc_norm"], cfg.norm_eps)
+    else:
+        enc_out = batch["enc_out"]
+
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    pos = write_pos + jnp.arange(s)[None, :]
+    x = x + _abs_pos(pos, d, x.dtype)
+    x = shard(x, "batch", "seq_sp", None)
+    positions = jnp.broadcast_to(pos, (b, s))
+    x, new_caches, aux = stack_apply(
+        params["groups"], x, cfg=cfg, positions=positions, caches=caches,
+        write_pos=write_pos if caches is not None else None, causal=True,
+        kv_src=enc_out, remat=remat, layout=AUDIO_DEC_LAYOUT)
+    if return_hidden:
+        return rms_norm(x, params["final_norm"], cfg.norm_eps), new_caches, aux
+    return _logits(cfg, params, x), new_caches, aux
+
+
+def _abs_pos(pos, d, dtype):
+    """Sinusoidal absolute positions for arbitrary (possibly traced) offsets."""
+    div = jnp.exp(-jnp.arange(0, d, 2, dtype=jnp.float32) / d * jnp.log(10_000.0))
+    ang = pos.astype(jnp.float32)[..., None] * div  # (B?, S, d/2)
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return pe.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# step-level entry points (used by launch/, examples/, dry-run)
+# ---------------------------------------------------------------------------
+
+
+def _chunked_xent(x, w_t, labels, vocab_chunk: int = 16384):
+    """Cross-entropy without materializing (B,S,V) logits (§Perf minitron C2:
+    for a 256k vocab the logits + f32 logsumexp dominate the non-attention
+    byte traffic). Scans vocab chunks with running (max, sumexp, gold);
+    checkpointed so the backward recomputes per-chunk logits too."""
+    b, s, d = x.shape
+    v = w_t.shape[1]
+    cs = min(vocab_chunk, v)
+    n_chunks = -(-v // cs)
+    vp = n_chunks * cs
+
+    def body(carry, ci):
+        m, acc, gold = carry
+        wc = jax.lax.dynamic_slice_in_dim(w_t, ci * cs, cs, axis=1)  # padded-safe? no: clamp
+        lg = (x @ wc).astype(jnp.float32)  # (B,S,cs)
+        col = ci * cs + jnp.arange(cs)
+        lg = jnp.where((col < v)[None, None, :], lg, -1e30)
+        m_new = jnp.maximum(m, lg.max(-1))
+        acc = acc * jnp.exp(m - m_new) + jnp.exp(lg - m_new[..., None]).sum(-1)
+        idx = labels - ci * cs
+        in_range = (idx >= 0) & (idx < cs)
+        g = jnp.take_along_axis(lg, jnp.clip(idx, 0, cs - 1)[..., None], axis=-1)[..., 0]
+        gold = gold + jnp.where(in_range, g, 0.0)
+        return (m_new, acc, gold), None
+
+    # keep W in-bounds: dynamic_slice clamps the start, so pad W to the grid
+    if vp != v:
+        w_t = jnp.pad(w_t, ((0, 0), (0, vp - v)))
+    init = (jnp.full((b, s), -1e30, jnp.float32), jnp.zeros((b, s), jnp.float32),
+            jnp.zeros((b, s), jnp.float32))
+    (m, acc, gold), _ = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False), init, jnp.arange(n_chunks))
+    lse = jnp.log(jnp.maximum(acc, 1e-30)) + m
+    mask = (labels >= 0).astype(jnp.float32)
+    return ((lse - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# §Perf minitron iteration C2 (REFUTED): chunked xent reduces peak logits
+# memory but NOT HBM traffic (each vocab chunk still materializes once, plus
+# per-chunk re-reads of x and the backward recompute) — measured +6% on the
+# memory term. Kept for its capacity benefit, off by default.
+LOSS_VOCAB_CHUNK_MIN = 1 << 30
+
+
+def lm_loss(cfg: ModelConfig, params, batch, *, remat="none"):
+    labels = batch["labels"]
+    if cfg.vocab_size >= LOSS_VOCAB_CHUNK_MIN and not cfg.logit_softcap:
+        x, _, aux = forward(cfg, params, batch, remat=remat, return_hidden=True)
+        w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        nll = _chunked_xent(x, w.astype(x.dtype), labels)
+        return nll + aux
+    logits, _, aux = forward(cfg, params, batch, remat=remat)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = ((lse - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll + aux
+
+
+def prefill(cfg, params, caches, batch, *, remat="none"):
+    logits, new_caches, _ = forward(cfg, params, batch, caches=caches, write_pos=0, remat=remat)
+    return logits, new_caches
+
+
+def decode_step(cfg, params, caches, batch, pos):
+    """batch["tokens"]: (B,1); pos: scalar int32 — returns (logits, caches)."""
+    logits, new_caches, _ = forward(cfg, params, batch, caches=caches, write_pos=pos)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; the dry-run shards these)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        spec = {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+        if cfg.family == "vlm":
+            spec["img_embeds"] = sds((b, cfg.n_image_tokens, cfg.d_model), dtype)
+        if cfg.is_encoder_decoder:
+            spec["frames"] = sds((b, s, cfg.d_model), dtype)
+        return spec
+    if shape.kind == "prefill":
+        spec = {"tokens": sds((b, s), i32)}
+        if cfg.family == "vlm":
+            spec["img_embeds"] = sds((b, cfg.n_image_tokens, cfg.d_model), dtype)
+        if cfg.is_encoder_decoder:
+            spec["frames"] = sds((b, s, cfg.d_model), dtype)
+        return spec
+    # decode: one new token against a seq_len cache
+    spec = {"tokens": sds((b, 1), i32)}
+    if cfg.family == "vlm":
+        spec["img_embeds"] = sds((b, cfg.n_image_tokens, cfg.d_model), dtype)
+    if cfg.is_encoder_decoder:
+        spec["enc_out"] = sds((b, s, cfg.d_model), dtype)
+    return spec

@@ -1,0 +1,114 @@
+"""Mamba (selective SSM) block — jamba's attention-free sublayer.
+
+Sequential-scan formulation (lax.scan over time): one HLO body regardless of
+sequence length, O(1) decode state = (conv ring buffer, SSM state). Numerics in
+fp32 for the recurrence.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Px, dense_init
+from repro.parallel.api import shard
+
+
+def _d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    d, di, n, cw = cfg.d_model, _d_inner(cfg), cfg.ssm_state_dim, cfg.ssm_conv_width
+    ks = jax.random.split(key, 7)
+    dt_rank = max(1, d // 16)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), ("embed", "mlp")),
+        "conv_w": dense_init(ks[1], (cw, di), (None, "mlp"), fan_in=cw),
+        "x_proj": dense_init(ks[2], (di, dt_rank + 2 * n), ("mlp", None)),
+        "dt_proj": dense_init(ks[3], (dt_rank, di), (None, "mlp")),
+        "a_log": Px(jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))),
+                    ("mlp", None)),
+        "d_skip": Px(jnp.ones((di,), jnp.float32), ("mlp",)),
+        "out_proj": dense_init(ks[4], (di, d), ("mlp", "embed"), fan_in=di),
+    }
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, cw-1, di) ring of last inputs
+    ssm: jax.Array  # (B, di, N) fp32
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> MambaState:
+    di, n, cw = _d_inner(cfg), cfg.ssm_state_dim, cfg.ssm_conv_width
+    return MambaState(conv=jnp.zeros((batch, cw - 1, di), dtype),
+                      ssm=jnp.zeros((batch, di, n), jnp.float32))
+
+
+MAMBA_STATE_AXES = MambaState(conv=("batch", None, "mlp"), ssm=("batch", "mlp", None))
+
+
+def mamba_block(p, x, cfg: ModelConfig, state: Optional[MambaState] = None):
+    """x: (B,S,D) -> (y, new_state). state carries decode recurrence."""
+    b, s, d = x.shape
+    di, n, cw = _d_inner(cfg), cfg.ssm_state_dim, cfg.ssm_conv_width
+    dt_rank = max(1, d // 16)
+    xz = x @ p["in_proj"].astype(x.dtype)  # (B,S,2di)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = shard(xs, "batch", None, "mlp")
+
+    # causal depthwise conv1d width cw (prepend state or zeros)
+    prev = state.conv.astype(xs.dtype) if state is not None else jnp.zeros((b, cw - 1, di), xs.dtype)
+    xpad = jnp.concatenate([prev, xs], axis=1)  # (B, S+cw-1, di)
+    conv_w = p["conv_w"].astype(xs.dtype)
+    xc = sum(xpad[:, i : i + s, :] * conv_w[i] for i in range(cw))
+    xc = jax.nn.silu(xc)
+    new_conv = jax.lax.dynamic_slice_in_dim(xpad, s, cw - 1, axis=1)
+
+    proj = xc @ p["x_proj"].astype(xs.dtype)  # (B,S,dt_rank+2n)
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ p["dt_proj"].astype(xs.dtype))  # (B,S,di)
+    bmat = proj[..., dt_rank : dt_rank + n].astype(jnp.float32)  # (B,S,n)
+    cmat = proj[..., dt_rank + n :].astype(jnp.float32)  # (B,S,n)
+    a = -jnp.exp(p["a_log"])  # (di, n) fp32
+
+    h0 = state.ssm if state is not None else jnp.zeros((b, di, n), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,di) (B,di) (B,n) (B,n)
+        da = jnp.exp(dtt.astype(jnp.float32)[..., None] * a)  # (B,di,n)
+        h = da * h + (dtt * xt).astype(jnp.float32)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    # §Perf: the selective scan is inherently sequential (per-channel decay
+    # couples (d, n, t) — the mamba2/SSD chunk trick needs scalar decay), but
+    # unrolling U steps per scan iteration keeps the (B,di,n) state out of HBM
+    # for U-1 of every U steps (it only crosses the loop boundary).
+    unroll = 16 if (s % 16 == 0 and s > 16) else (8 if (s % 8 == 0 and s > 8) else 1)
+
+    def step_u(h, inps):
+        ys = []
+        for u in range(unroll):
+            h, y = step(h, jax.tree_util.tree_map(lambda t: t[u], inps))
+            ys.append(y)
+        return h, jnp.stack(ys)
+
+    xs_t = jnp.moveaxis(xc, 1, 0)  # (S,B,di)
+    dt_t = jnp.moveaxis(dt, 1, 0)
+    b_t = jnp.moveaxis(bmat, 1, 0)
+    c_t = jnp.moveaxis(cmat, 1, 0)
+    if unroll > 1:
+        seq = jax.tree_util.tree_map(
+            lambda t: t.reshape(s // unroll, unroll, *t.shape[1:]),
+            (xs_t, dt_t, b_t, c_t))
+        h_last, ys = jax.lax.scan(step_u, h0, seq)
+        ys = ys.reshape(s, b, di)
+    else:
+        h_last, ys = jax.lax.scan(step, h0, (xs_t, dt_t, b_t, c_t))
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B,S,di)
+    y = y + xc * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return shard(out, "batch", "seq_sp", None), MambaState(conv=new_conv, ssm=h_last)

@@ -1,0 +1,266 @@
+"""Unified decoder stack: every LM family as a scan over repeating layer groups.
+
+A *group* is the smallest repeating pattern of sublayers:
+  dense/moe LM    -> [attn]                        x n_layers groups
+  jamba hybrid    -> [mamba x4, attn, mamba x3]    x (n_layers/8) groups
+                      (attn at index 4; MoE FFN on odd indices)
+  llama-vision    -> [self x4, cross]              x (n_layers/5) groups
+  xlstm           -> [mlstm, slstm]                x (n_layers/2) groups
+
+Group params are stacked on a leading (n_groups,) axis and the stack runs as a
+single `lax.scan` — one HLO body per family regardless of depth (compile time
+and remat policy both depend on the body, not the depth). Caches ride the scan
+as per-group xs/ys.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sparse_ffn import activation_fn
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import Px, dense_init, ones_init, rms_norm, unzip_params
+from repro.models.moe import init_moe, moe_ffn
+from repro.parallel.api import shard
+
+
+class Sub(NamedTuple):
+    kind: str  # attn | mla | cross | mamba | mlstm | slstm
+    ffn: str  # dense | moe | moe+dense | none
+
+
+def group_layout(cfg: ModelConfig) -> list[Sub]:
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio") or (fam == "moe" and cfg.attn_type == "gqa"):
+        base_ffn = "moe+dense" if (cfg.n_experts and cfg.dense_residual_ff) else (
+            "moe" if cfg.n_experts else "dense")
+        if fam == "vlm" and cfg.cross_attn_every:
+            n = cfg.cross_attn_every
+            return [Sub("attn", base_ffn)] * (n - 1) + [Sub("cross", base_ffn)]
+        return [Sub("attn", base_ffn)]
+    if fam == "moe":  # mla
+        return [Sub("mla", "moe")]
+    if fam == "hybrid":
+        n = cfg.attn_every
+        attn_pos = n // 2
+        out = []
+        for i in range(n):
+            kind = "attn" if i == attn_pos else "mamba"
+            ffn = "moe" if (cfg.moe_every and i % cfg.moe_every == 1) else "dense"
+            out.append(Sub(kind, ffn))
+        return out
+    if fam == "ssm":
+        return [Sub("mlstm", "none"), Sub("slstm", "none")]
+    raise ValueError(fam)
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    lay = group_layout(cfg)
+    assert cfg.n_layers % len(lay) == 0, (cfg.name, cfg.n_layers, len(lay))
+    return cfg.n_layers // len(lay)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_activation in ("relu", "relu2"):  # non-gated: the ECR-sparse form
+        return {
+            "w1": dense_init(ks[0], (d, d_ff), ("embed", "mlp")),
+            "w2": dense_init(ks[1], (d_ff, d), ("mlp", "embed"), fan_in=d_ff),
+        }
+    return {
+        "w1": dense_init(ks[0], (d, d_ff), ("embed", "mlp")),
+        "w3": dense_init(ks[1], (d, d_ff), ("embed", "mlp")),
+        "w2": dense_init(ks[2], (d_ff, d), ("mlp", "embed"), fan_in=d_ff),
+    }
+
+
+def ffn_apply(p, x, cfg: ModelConfig):
+    act = activation_fn(cfg.mlp_activation)
+    if "w3" in p:
+        h = act(x @ p["w1"].astype(x.dtype)) * (x @ p["w3"].astype(x.dtype))
+    else:
+        h = act(x @ p["w1"].astype(x.dtype))
+        if cfg.ffn_sparsity == "block_ecr":
+            # dense-equivalent of the block-ECR skip (DESIGN.md §4): exact zeros
+            # after ReLU-family activations; the Pallas bsr_matmul realizes the
+            # skip on hardware, XLA sees the numerically-identical masked form.
+            h = shard(h, "batch", None, "mlp")
+    h = shard(h, "batch", None, "mlp")
+    return shard(h @ p["w2"].astype(x.dtype), "batch", "seq_sp", None)
+
+
+def init_sublayer(key, sub: Sub, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict[str, Any] = {"ln1": ones_init((cfg.d_model,), (None,))}
+    if sub.kind == "attn":
+        p["mix"] = attn_mod.init_gqa(k1, cfg)
+    elif sub.kind == "cross":
+        p["mix"] = attn_mod.init_gqa(k1, cfg, cross=True)
+    elif sub.kind == "mla":
+        p["mix"] = attn_mod.init_mla(k1, cfg)
+    elif sub.kind == "mamba":
+        p["mix"] = ssm_mod.init_mamba(k1, cfg)
+    elif sub.kind == "mlstm":
+        p["mix"] = xlstm_mod.init_mlstm(k1, cfg)
+    elif sub.kind == "slstm":
+        p["mix"] = xlstm_mod.init_slstm(k1, cfg)
+    else:
+        raise ValueError(sub.kind)
+    if sub.ffn != "none":
+        p["ln2"] = ones_init((cfg.d_model,), (None,))
+        if "moe" in sub.ffn:
+            p["moe"] = init_moe(k2, cfg)
+        if sub.ffn in ("dense", "moe+dense"):
+            p["ffn"] = init_ffn(k3, cfg, cfg.d_ff)
+    return p
+
+
+def _stack_px(trees: list):
+    """Stack a list of Px-trees along a new leading 'layers' axis."""
+    def is_px(x):
+        return isinstance(x, Px)
+
+    def stack(*leaves):
+        return Px(jnp.stack([l.value for l in leaves]), ("layers",) + tuple(leaves[0].axes))
+
+    return jax.tree_util.tree_map(stack, *trees, is_leaf=is_px)
+
+
+def init_groups(key, cfg: ModelConfig, layout=None, groups=None):
+    lay = layout or group_layout(cfg)
+    g = groups or n_groups(cfg)
+
+    def one_group(k):
+        ks = jax.random.split(k, len(lay))
+        return {f"sub{i}": init_sublayer(ks[i], s, cfg) for i, s in enumerate(lay)}
+
+    return _stack_px([one_group(k) for k in jax.random.split(key, g)])
+
+
+# ---------------------------------------------------------------------------
+# caches (decode / prefill state), aligned with the group layout
+# ---------------------------------------------------------------------------
+
+
+def _is_axes_leaf(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def _prefix_layers(axes_tree):
+    return jax.tree_util.tree_map(lambda t: ("layers",) + t, axes_tree, is_leaf=_is_axes_leaf)
+
+
+def init_group_caches(cfg: ModelConfig, batch: int, max_len: int, dtype, layout=None, groups=None):
+    """Returns (cache_tree, axes_tree): per sublayer position, stacked (G, ...)."""
+    lay = layout or group_layout(cfg)
+    g = groups or n_groups(cfg)
+
+    def stack_leading(tree):
+        return jax.tree_util.tree_map(lambda x: jnp.broadcast_to(x, (g,) + x.shape).copy(), tree)
+
+    # int8 requests quantized KV caches; recurrent/latent states stay bf16
+    base_dt = jnp.bfloat16 if dtype == jnp.int8 else dtype
+    caches, axes = [], []
+    for s in lay:
+        if s.kind == "attn":
+            c = attn_mod.init_gqa_cache(cfg, batch, max_len, dtype)
+            a = _prefix_layers(attn_mod.cache_axes(dtype == jnp.int8))
+        elif s.kind == "mla":
+            c = attn_mod.init_mla_cache(cfg, batch, max_len, base_dt)
+            a = _prefix_layers(attn_mod.MLA_CACHE_AXES)
+        elif s.kind == "mamba":
+            c = ssm_mod.init_mamba_state(cfg, batch, base_dt)
+            a = _prefix_layers(ssm_mod.MAMBA_STATE_AXES)
+        elif s.kind == "mlstm":
+            c = xlstm_mod.init_mlstm_state(cfg, batch)
+            a = _prefix_layers(xlstm_mod.MLSTM_STATE_AXES)
+        elif s.kind == "slstm":
+            c = xlstm_mod.init_slstm_state(cfg, batch)
+            a = _prefix_layers(xlstm_mod.SLSTM_STATE_AXES)
+        else:  # cross: kv recomputed from the (static) image/encoder tokens
+            c, a = None, None
+        caches.append(stack_leading(c) if c is not None else None)
+        axes.append(a)
+    return tuple(caches), tuple(axes)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def apply_sublayer(sub: Sub, p, x, *, cfg, positions, cache, write_pos, causal, kv_src):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    new_cache = None
+    if sub.kind in ("attn", "cross"):
+        out, new_cache = attn_mod.gqa_attention(
+            p["mix"], h, cfg=cfg, positions=positions,
+            causal=(causal and sub.kind == "attn"),
+            cache=cache, write_pos=write_pos,
+            kv_src=kv_src if sub.kind == "cross" else None)
+    elif sub.kind == "mla":
+        out, new_cache = attn_mod.mla_attention(
+            p["mix"], h, cfg=cfg, positions=positions, causal=causal,
+            cache=cache, write_pos=write_pos)
+    elif sub.kind == "mamba":
+        out, new_cache = ssm_mod.mamba_block(p["mix"], h, cfg, state=cache)
+    elif sub.kind == "mlstm":
+        out, new_cache = xlstm_mod.mlstm_block(p["mix"], h, cfg, state=cache)
+    elif sub.kind == "slstm":
+        out, new_cache = xlstm_mod.slstm_block(p["mix"], h, cfg, state=cache)
+    else:
+        raise ValueError(sub.kind)
+    x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if sub.ffn != "none":
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        delta = 0.0
+        if "moe" in p:
+            mo, aux = moe_ffn(p["moe"], h2, cfg)
+            delta = delta + mo
+        if "ffn" in p:
+            delta = delta + ffn_apply(p["ffn"], h2, cfg)
+        x = x + delta
+    return x, new_cache, aux
+
+
+def stack_apply(groups_params, x, *, cfg: ModelConfig, positions,
+                caches=None, write_pos=None, causal=True, kv_src=None,
+                remat: str = "none", layout=None):
+    """Run the full group stack. Returns (x, new_caches, aux_loss)."""
+    lay = layout or group_layout(cfg)
+    use_cache = caches is not None
+
+    def body(carry, xs):
+        x, aux = carry
+        gp, gcache = xs if use_cache else (xs, tuple(None for _ in lay))
+        new_caches = []
+        for i, sub in enumerate(lay):
+            x, nc, a = apply_sublayer(
+                sub, gp[f"sub{i}"], x, cfg=cfg, positions=positions,
+                cache=gcache[i], write_pos=write_pos, causal=causal, kv_src=kv_src)
+            new_caches.append(nc)
+            aux = aux + a
+        return (x, aux), (tuple(new_caches) if use_cache else None)
+
+    if remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    xs = (groups_params, caches) if use_cache else groups_params
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, new_caches, aux

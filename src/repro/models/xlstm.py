@@ -1,0 +1,277 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar memory).
+
+Alternating mLSTM/sLSTM stack per the xlstm-125m config. Both use exponential
+gating with the max-stabilizer; recurrences run as lax.scan over time in fp32.
+Decode state is O(1): (C, n, m) for mLSTM, (c, n, h, m) for sLSTM — this is
+why xlstm runs the long_500k cell that full-attention archs must skip.
+
+d_ff = 0 in the config: the mLSTM block carries a pre-up-projection (expand=2)
+and the sLSTM block a gated 4/3 FFN, per the paper's block diagrams.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, ones_init, rms_norm
+from repro.parallel.api import shard
+
+
+def _di(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    d, di, h = cfg.d_model, _di(cfg), cfg.n_heads
+    dh = di // h
+    ks = jax.random.split(key, 8)
+    return {
+        "up": dense_init(ks[0], (d, 2 * di), ("embed", "mlp")),
+        "wq": dense_init(ks[1], (di, h, dh), ("mlp", "heads", "head_dim")),
+        "wk": dense_init(ks[2], (di, h, dh), ("mlp", "heads", "head_dim")),
+        "wv": dense_init(ks[3], (di, h, dh), ("mlp", "heads", "head_dim")),
+        "wi": dense_init(ks[4], (di, h), ("mlp", "heads")),
+        "wf": dense_init(ks[5], (di, h), ("mlp", "heads")),
+        "down": dense_init(ks[6], (di, d), ("mlp", "embed"), fan_in=di),
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, dh, dh) matrix memory
+    n: jax.Array  # (B, H, dh)
+    m: jax.Array  # (B, H) stabilizer
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    h, dh = cfg.n_heads, _di(cfg) // cfg.n_heads
+    return MLSTMState(
+        c=jnp.zeros((batch, h, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, h, dh), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+    )
+
+
+MLSTM_STATE_AXES = MLSTMState(c=("batch", "heads", None, None),
+                              n=("batch", "heads", None), m=("batch", "heads"))
+
+
+def mlstm_block(p, x, cfg: ModelConfig, state: Optional[MLSTMState] = None,
+                chunk: int = 128):
+    # chunk balances boundary state writes (∝ S/L · dh²) against intra-chunk
+    # (L,L) tile materializations (∝ S·L·H): L=256 regressed 5x (intra-bound),
+    # L=128 is the measured optimum (§Perf iterations 3-4).
+    b, s, d = x.shape
+    di, h = _di(cfg), cfg.n_heads
+    dh = di // h
+    up = x @ p["up"].astype(x.dtype)
+    xi, z = jnp.split(up, 2, axis=-1)  # (B,S,di) each
+    xi = shard(xi, "batch", None, "mlp")
+    q = jnp.einsum("bsd,dhk->bshk", xi, p["wq"].astype(x.dtype)) * dh ** -0.5
+    k = jnp.einsum("bsd,dhk->bshk", xi, p["wk"].astype(x.dtype)) * dh ** -0.5
+    v = jnp.einsum("bsd,dhk->bshk", xi, p["wv"].astype(x.dtype))
+    ig = jnp.einsum("bsd,dh->bsh", xi, p["wi"].astype(x.dtype)).astype(jnp.float32)
+    fg = jnp.einsum("bsd,dh->bsh", xi, p["wf"].astype(x.dtype)).astype(jnp.float32)
+
+    st = state if state is not None else init_mlstm_state(cfg, b)
+    if s > 1 and s % chunk == 0:
+        (c, n, m), y = _mlstm_chunkwise(q, k, v, ig, fg, st, chunk)
+    else:
+        (c, n, m), y = _mlstm_sequential(q, k, v, ig, fg, st)
+    y = y.astype(x.dtype).reshape(b, s, di)
+    y = y * jax.nn.silu(z)
+    out = y @ p["down"].astype(x.dtype)
+    return shard(out, "batch", "seq_sp", None), MLSTMState(c=c, n=n, m=m)
+
+
+def _mlstm_sequential(q, k, v, ig, fg, st: MLSTMState):
+    """Step-by-step oracle (and the decode path: one state update per token)."""
+
+    def step(carry, inp):
+        c, n, m = carry
+        qt, kt, vt, it, ft = inp  # (B,H,dh) x3, (B,H) x2
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(logf + m - m_new)
+        c = f_[..., None, None] * c + i_[..., None, None] * (
+            vt.astype(jnp.float32)[..., :, None] * kt.astype(jnp.float32)[..., None, :]
+        )
+        n = f_[..., None] * n + i_[..., None] * kt.astype(jnp.float32)
+        hn = jnp.einsum("bhvk,bhk->bhv", c, qt.astype(jnp.float32))
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt.astype(jnp.float32))),
+                            jnp.exp(-m_new))
+        y = hn / denom[..., None]
+        return (c, n, m_new), y
+
+    seq = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+           jnp.moveaxis(ig, 1, 0), jnp.moveaxis(fg, 1, 0))
+    (c, n, m), ys = jax.lax.scan(step, (st.c, st.n, st.m), seq)
+    return (c, n, m), jnp.moveaxis(ys, 0, 1)  # (B,S,H,dh)
+
+
+def _mlstm_chunkwise(q, k, v, ig, fg, st: MLSTMState, L: int):
+    """Stabilized chunkwise-parallel mLSTM (§Perf hillclimb: the sequential
+    scan materializes the (B,H,dh,dh) matrix memory EVERY step — 590MB/step
+    for xlstm-125m train_4k, the worst memory term of the whole grid).
+
+    Within a chunk of L steps everything is (L,L)/(L,dh) matmuls; the matrix
+    state C/n/m is materialized only at chunk boundaries (L x fewer HBM
+    round-trips). Derivation: with b_j = cumsum(log sig f), M_j = max(m_prev,
+    cummax_l<=j(i_l - b_l)) and the stored-state invariant C_stored = e^{-m} C,
+      intra_jl = e^{(i_l - b_l) - M_j} (l<=j),   inter_j = e^{m_prev - M_j}
+      y_j = [ (S (.) intra) V + inter_j (q C_prev) ] / max(|.|_n, e^{-m_j})
+    Validated against `_mlstm_sequential` (tests/test_xlstm_chunkwise.py)."""
+    b, s, h, dh = q.shape
+    nc = s // L
+    qf = jnp.moveaxis(q.reshape(b, nc, L, h, dh), 1, 0).astype(jnp.float32)
+    kf = jnp.moveaxis(k.reshape(b, nc, L, h, dh), 1, 0).astype(jnp.float32)
+    vf = jnp.moveaxis(v.reshape(b, nc, L, h, dh), 1, 0).astype(jnp.float32)
+    igf = jnp.moveaxis(ig.reshape(b, nc, L, h), 1, 0)
+    fgf = jnp.moveaxis(fg.reshape(b, nc, L, h), 1, 0)
+
+    def chunk_step(carry, inp):
+        c, n, m_prev = carry  # (B,H,dh,dh) (B,H,dh) (B,H)
+        qc_, kc_, vc_, ic_, fc_ = inp  # (B,L,H,dh)x3 (B,L,H)x2
+        logf = jax.nn.log_sigmoid(fc_)  # (B,L,H)
+        bj = jnp.cumsum(logf, axis=1)  # (B,L,H) cumulative decay
+        a = ic_ - bj  # i_l - b_l
+        mj_run = jnp.maximum(jax.lax.cummax(a, axis=1), m_prev[:, None, :])  # M_j
+        m_j = bj + mj_run  # per-position stabilizer
+        # intra-chunk decay weights w_jl = exp((i_l - b_l) - M_j), causal l <= j
+        w = jnp.exp(a[:, :, None, :] - mj_run[:, None, :, :])  # (B,l,j,H)
+        mask = jnp.tril(jnp.ones((L, L), bool))  # (j,l): l <= j
+        w = jnp.where(mask.T[None, :, :, None], w, 0.0)
+        qk = jnp.einsum("bjhd,blhd->bljh", qc_, kc_)  # q_j . k_l
+        # H(=4) cannot shard the 16-way model axis — without this constraint
+        # the (B,L,L,H) intra tensors replicate over it (§Perf iter 6: shard j)
+        qk = shard(qk, "batch", None, "seq_sp", None)
+        sw = qk * w
+        sw = shard(sw, "batch", None, "seq_sp", None)
+        intra = jnp.einsum("bljh,blhd->bjhd", sw, vc_)  # (B,j,H,dh)
+        inter_f = jnp.exp(m_prev[:, None, :] - mj_run)  # (B,j,H)
+        # C is (v-dim, k-dim); q contracts the k-dim (matches sequential bhvk,bhk->bhv)
+        inter = jnp.einsum("bjhe,bhde->bjhd", qc_, c) * inter_f[..., None]
+        num = intra + inter
+        # normalizer: q_j . n_j with the same weights (n accumulates k's)
+        qn = jnp.einsum("bljh->bjh", sw)
+        qn = qn + jnp.einsum("bjhd,bhd->bjh", qc_, n) * inter_f
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_j))
+        y = num / denom[..., None]
+        # chunk-end state update (weights at row j = L-1)
+        wL = jnp.exp(a - mj_run[:, -1:, :])  # (B,l,H)
+        decay_end = jnp.exp(m_prev - mj_run[:, -1, :])
+        c_new = decay_end[..., None, None] * c + jnp.einsum(
+            "blh,blhd,blhe->bhde", wL, vc_, kc_)
+        n_new = decay_end[..., None] * n + jnp.einsum("blh,blhd->bhd", wL, kc_)
+        return (c_new, n_new, m_j[:, -1, :]), y
+
+    (c, n, m), ys = jax.lax.scan(chunk_step, (st.c, st.n, st.m),
+                                 (qf, kf, vf, igf, fgf))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, dh)
+    return (c, n, m), y
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    f = int(d * 4 / 3) // 8 * 8  # gated 4/3 FFN, 8-aligned
+    ks = jax.random.split(key, 7)
+    return {
+        "wz": dense_init(ks[0], (d, d), ("embed", "mlp")),
+        "wi": dense_init(ks[1], (d, d), ("embed", "mlp")),
+        "wf": dense_init(ks[2], (d, d), ("embed", "mlp")),
+        "wo": dense_init(ks[3], (d, d), ("embed", "mlp")),
+        # recurrent matrix (z,i,f,o). NOTE §Perf iterations 3-4: a block-
+        # diagonal per-head form (xLSTM paper's design, H x fewer weights)
+        # REGRESSED the memory term 5x — the batched (B,H,dh)x(H,dh,4dh)
+        # einsum inside the unrolled scan lowers to per-step reshape/copy
+        # chains that outweigh the weight-bytes saved. Kept dense.
+        "r": dense_init(ks[4], (d, 4 * d), ("embed", "mlp")),
+        "ffn_up": dense_init(ks[5], (d, 2 * f), ("embed", "mlp")),
+        "ffn_down": dense_init(ks[6], (f, d), ("mlp", "embed"), fan_in=f),
+        "norm": ones_init((d,), (None,)),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, D)
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, d), -1e30, jnp.float32))
+
+
+SLSTM_STATE_AXES = SLSTMState(c=("batch", "mlp"), n=("batch", "mlp"),
+                              h=("batch", "mlp"), m=("batch", "mlp"))
+
+
+def slstm_block(p, x, cfg: ModelConfig, state: Optional[SLSTMState] = None):
+    b, s, d = x.shape
+    h_heads = cfg.n_heads
+    dh = d // h_heads
+    z_in = x @ p["wz"].astype(x.dtype)
+    i_in = x @ p["wi"].astype(x.dtype)
+    f_in = x @ p["wf"].astype(x.dtype)
+    o_in = x @ p["wo"].astype(x.dtype)
+    st = state if state is not None else init_slstm_state(cfg, b)
+    r = p["r"].astype(jnp.float32)  # (H, dh, 4dh) block-diagonal recurrence
+
+    def step(carry, inp):
+        c, n, hprev, m = carry
+        zt, it, ft, ot = (t.astype(jnp.float32) for t in inp)  # (B,D)
+        rec = hprev @ r  # (B, 4D)
+        rz, ri, rf, ro = jnp.split(rec, 4, axis=-1)
+        zt, it, ft, ot = zt + rz, it + ri, ft + rf, ot + ro
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(logf + m - m_new)
+        c = f_ * c + i_ * jnp.tanh(zt)
+        n = f_ * n + i_
+        h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    seq = tuple(jnp.moveaxis(t, 1, 0) for t in (z_in, i_in, f_in, o_in))
+    # §Perf: sLSTM is truly sequential (recurrent R h_{t-1}); unroll U steps
+    # per scan iteration so the (B,D) states cross the HBM loop boundary U x
+    # less often (same trick as the mamba scan).
+    unroll = 16 if (s % 16 == 0 and s > 16) else (8 if (s % 8 == 0 and s > 8) else 1)
+    if unroll > 1:
+        def step_u(carry, inps):
+            ys = []
+            for u in range(unroll):
+                carry, y = step(carry, jax.tree_util.tree_map(lambda t: t[u], inps))
+                ys.append(y)
+            return carry, jnp.stack(ys)
+
+        sequ = jax.tree_util.tree_map(
+            lambda t: t.reshape(s // unroll, unroll, *t.shape[1:]), seq)
+        (c, n, hl, m), ys = jax.lax.scan(step_u, (st.c, st.n, st.h, st.m), sequ)
+        ys = ys.reshape(s, b, d)
+    else:
+        (c, n, hl, m), ys = jax.lax.scan(step, (st.c, st.n, st.h, st.m), seq)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B,S,D)
+    # post-norm gated FFN (4/3)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    u = y @ p["ffn_up"].astype(x.dtype)
+    u1, u2 = jnp.split(u, 2, axis=-1)
+    y = (jax.nn.gelu(u1) * u2) @ p["ffn_down"].astype(x.dtype)
+    return shard(y, "batch", "seq_sp", None), SLSTMState(c=c, n=n, h=hl, m=m)

@@ -1,0 +1,17 @@
+from repro.optim.adamw import OptState, adamw_update, init_opt_state
+from repro.optim.schedules import warmup_cosine
+from repro.optim.compression import (
+    compress_grads,
+    decompress_grads,
+    init_error_feedback,
+)
+
+__all__ = [
+    "OptState",
+    "adamw_update",
+    "init_opt_state",
+    "warmup_cosine",
+    "compress_grads",
+    "decompress_grads",
+    "init_error_feedback",
+]

@@ -1,0 +1,63 @@
+"""AdamW with configurable moment dtype (bf16 moments for the 480B-class archs
+— fp32 m/v for 480B params is 3.8TB of optimizer state; bf16 halves it, and
+both moments shard with the params under FSDP so HBM cost is per-chip tiny).
+
+Grad clipping by global norm is fused into the update (single pass).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array  # () int32
+    m: dict
+    v: dict
+
+
+def init_opt_state(params, moment_dtype=jnp.float32) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(grads, state: OptState, params, *, lr, beta1=0.9, beta2=0.95,
+                 eps=1e-8, weight_decay=0.1, grad_clip=1.0):
+    """Returns (new_params, new_state, grad_norm)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.where(grad_clip > 0, jnp.minimum(1.0, grad_clip / (gnorm + 1e-9)), 1.0)
+
+    bc1 = 1.0 - beta1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - beta2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = beta1 * m32 + (1 - beta1) * g
+        v_new = beta2 * v32 + (1 - beta2) * jnp.square(g)
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (update + weight_decay * p32)
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(step=step, m=new_m, v=new_v), gnorm

@@ -1,0 +1,70 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Two schemes, both applied at the microbatch-accumulation boundary of
+train_step (where cross-replica reduction happens under GSPMD):
+
+- int8: per-tensor absmax scaling + stochastic rounding. 4x traffic reduction
+  on the gradient all-reduce/reduce-scatter; the quantization residual is
+  carried in an error-feedback buffer so the bias vanishes over steps.
+- topk: keep the largest |g| fraction per tensor, accumulate the rest in the
+  error-feedback buffer (Deep Gradient Compression style).
+
+`compress -> (reduce) -> decompress` is numerically a drop-in for the raw
+gradient; convergence equivalence on a quadratic is property-tested.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _int8_one(g, err, key):
+    g = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    scaled = g / scale
+    noise = jax.random.uniform(key, g.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return (q, scale), g - deq
+
+
+def _topk_one(g, err, frac):
+    g = g.astype(jnp.float32) + err
+    k = max(1, int(g.size * frac))
+    flat = g.reshape(-1)
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    kept = jnp.where(mask, flat, 0.0).reshape(g.shape)
+    return kept, g - kept
+
+
+def compress_grads(grads, err, *, scheme: str, key=None, topk_frac: float = 0.01):
+    """Returns (compressed_tree, new_err_tree)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    errs = treedef.flatten_up_to(err)
+    if scheme == "int8":
+        keys = jax.random.split(key, len(leaves))
+        out = [_int8_one(g, e, k) for g, e, k in zip(leaves, errs, keys)]
+    elif scheme == "topk":
+        out = [_topk_one(g, e, topk_frac) for g, e in zip(leaves, errs)]
+    else:
+        raise ValueError(scheme)
+    comp = treedef.unflatten([o[0] for o in out])
+    new_err = treedef.unflatten([o[1] for o in out])
+    return comp, new_err
+
+
+def decompress_grads(comp, *, scheme: str):
+    if scheme == "int8":
+        return jax.tree_util.tree_map(
+            lambda qs: qs[0].astype(jnp.float32) * qs[1],
+            comp, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2 and not isinstance(x[0], tuple))
+    if scheme == "topk":
+        return comp
+    raise ValueError(scheme)

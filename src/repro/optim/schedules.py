@@ -1,0 +1,10 @@
+"""LR schedules (pure functions of the step scalar; safe inside jit)."""
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr, warmup_steps, total_steps, min_frac=0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = peak_lr * s / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = peak_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup_steps, warm, cos)

@@ -1,0 +1,3 @@
+from repro.parallel.api import axis_rules, current_mesh, logical_spec, shard, sharding_for
+
+__all__ = ["axis_rules", "current_mesh", "logical_spec", "shard", "sharding_for"]

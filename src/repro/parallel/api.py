@@ -1,0 +1,128 @@
+"""Logical-axis sharding: model code names dimensions, rules map them to mesh axes.
+
+Models annotate tensors with *logical* dimension names ("batch", "heads",
+"experts", ...). A rules table maps each name to an ordered list of candidate
+mesh-axis tuples. Resolution per tensor:
+
+  for each dim (left to right), take the first candidate whose axes are all
+  (a) present in the mesh, (b) not already used by an earlier dim of this
+  tensor, and (c) divide the dim size evenly. Otherwise the dim is replicated.
+
+This pruning is what lets one rule set serve every (arch x shape x mesh) cell:
+e.g. "batch" -> ("pod","data") shrinks to ("data",) on the single-pod mesh and
+prunes away entirely for the batch=1 long-context cell (where "cache_seq" then
+picks up the data axes).
+
+Outside an `axis_rules` context everything is a no-op, so smoke tests and the
+CPU examples never touch device state.
+"""
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# fsdp: parameter dims that shard over the data axes (ZeRO-3); the "pod" axis
+# joins both the batch and the fsdp shardings on the multi-pod mesh.
+DEFAULT_RULES: dict[str, list[tuple[str, ...]]] = {
+    # activations
+    "batch": [("pod", "data"), ("data",)],
+    "seq_sp": [("model",)],  # Megatron-SP activation sequence sharding
+    "act_embed": [],
+    # caches / recurrent state
+    "cache_seq": [("pod", "data"), ("data",)],
+    "cache_kv": [("model",)],
+    "cache_hd": [("model",)],
+    # params
+    "vocab": [("model",)],
+    "embed": [("pod", "data"), ("data",)],  # FSDP dim
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "head_dim": [],
+    "mlp": [("model",)],
+    "experts": [("model",)],  # EP
+    "expert_cap": [("pod", "data"), ("data",)],
+    "kv_lora": [],
+    "q_lora": [],
+    "layers": [],
+    "none": [],
+}
+
+
+def is_axes_leaf(x) -> bool:
+    """A logical-axes annotation: tuple of axis names / None (incl. empty)."""
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x) and (
+        not hasattr(x, "_fields") or len(x) == 0)
+
+
+def axes_leaves(tree) -> list:
+    return jax.tree_util.tree_leaves(tree, is_leaf=is_axes_leaf)
+
+
+class _Ctx:
+    mesh: Optional[Mesh] = None
+    rules: dict = DEFAULT_RULES
+
+
+_CTX = _Ctx()
+
+
+@contextmanager
+def axis_rules(mesh: Mesh, rules: dict | None = None, fsdp: bool = True):
+    prev = (_CTX.mesh, _CTX.rules)
+    r = dict(rules or DEFAULT_RULES)
+    if not fsdp:
+        r["embed"] = []
+    _CTX.mesh, _CTX.rules = mesh, r
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def logical_spec(shape: Sequence[int], names: Sequence[Optional[str]],
+                 mesh: Optional[Mesh] = None, rules: dict | None = None) -> P:
+    """Resolve logical names -> PartitionSpec with conflict/divisibility pruning."""
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if mesh is None:
+        return P()
+    assert len(shape) == len(names), (shape, names)
+    mesh_axes = set(mesh.axis_names)
+    used: set[str] = set()
+    out = []
+    for size, name in zip(shape, names):
+        assigned: tuple[str, ...] | None = None
+        for cand in rules.get(name or "none", []):
+            axes = tuple(a for a in cand if a in mesh_axes)
+            if not axes or any(a in used for a in axes):
+                continue
+            k = math.prod(mesh.shape[a] for a in axes)
+            if k > 1 and size % k == 0:
+                assigned = axes
+                used.update(axes)
+                break
+        out.append(assigned if assigned is None or len(assigned) > 1 else assigned[0])
+    return P(*out)
+
+
+def sharding_for(shape, names, mesh=None) -> Optional[NamedSharding]:
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_spec(shape, names, mesh))
+
+
+def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint by logical names; identity outside a context."""
+    if _CTX.mesh is None:
+        return x
+    spec = logical_spec(x.shape, names)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))

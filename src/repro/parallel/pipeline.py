@@ -1,0 +1,83 @@
+"""GPipe-style pipeline parallelism over a mesh axis (the "pod" axis).
+
+`pipeline_apply` runs S stages on S mesh slices with M microbatches using the
+classic (M + S - 1)-tick schedule: at tick t, stage s processes microbatch
+t - s; activations hop stage->stage via collective_permute. Differentiable
+(the transpose of ppermute is the reverse hop, so jax.grad yields the 1F1B-
+equivalent backward wave automatically).
+
+This is the PP building block offered by the framework (RunConfig.
+pipeline_stages); the production default for the multi-pod mesh is FSDP over
+"pod" (DESIGN.md §6), with PP as the alternative when cross-pod bandwidth is
+the binding constraint — activations/S vs gradients/step is the trade.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def pipeline_apply(stage_fn, stage_params, x_micro, *, mesh: Mesh, axis: str = "pod"):
+    """stage_params: tree with leaves stacked (S, ...); x_micro: (M, mb, ...).
+
+    Returns (M, mb, ...) outputs of the full S-stage pipeline.
+    stage_fn(params_for_one_stage, x) -> y with y.shape == x.shape.
+    """
+    s_count = mesh.shape[axis]
+    m_count = x_micro.shape[0]
+
+    def per_stage(params_local, x_local):
+        # params_local: (1, ...) slice for this stage; x_local: full (M, ...)
+        # (microbatches replicated along the stage axis; only stage 0 consumes)
+        params_me = jax.tree_util.tree_map(lambda p: p[0], params_local)
+        sid = jax.lax.axis_index(axis)
+        mb_shape = x_local.shape[1:]
+        perm = [(i, i + 1) for i in range(s_count - 1)]
+
+        def tick(carry, t):
+            incoming, outputs = carry
+            mb_idx = jnp.clip(t, 0, m_count - 1)
+            first_in = jax.lax.dynamic_index_in_dim(x_local, mb_idx, 0, keepdims=False)
+            x_in = jnp.where(sid == 0, first_in, incoming)
+            y = stage_fn(params_me, x_in)
+            out_idx = t - (s_count - 1)
+            valid_out = (sid == s_count - 1) & (out_idx >= 0) & (out_idx < m_count)
+            outputs = jax.lax.cond(
+                valid_out,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.clip(out_idx, 0, m_count - 1), 0),
+                lambda o: o,
+                outputs,
+            )
+            nxt = jax.lax.ppermute(y, axis, perm)
+            return (nxt, outputs), None
+
+        init = (jnp.zeros(mb_shape, x_local.dtype),
+                jnp.zeros((m_count,) + mb_shape, x_local.dtype))
+        (_, outputs), _ = jax.lax.scan(tick, init, jnp.arange(m_count + s_count - 1))
+        # only the last stage holds real outputs; sum over the stage axis
+        outputs = jnp.where(sid == s_count - 1, outputs, 0)
+        return jax.lax.psum(outputs, axis)
+
+    pspec = jax.tree_util.tree_map(lambda _: P(axis), stage_params)
+    fn = shard_map(
+        per_stage, mesh=mesh,
+        in_specs=(pspec, P()),  # params split by stage, microbatches replicated
+        out_specs=P(),
+        check_rep=False,
+    )
+    return fn(stage_params, x_micro)
+
+
+def split_stages(stacked_params, n_stages: int):
+    """Reshape (L, ...) stacked layer params into (S, L/S, ...) stage stacks."""
+    def r(x):
+        l = x.shape[0]
+        assert l % n_stages == 0, (l, n_stages)
+        return x.reshape(n_stages, l // n_stages, *x.shape[1:])
+
+    return jax.tree_util.tree_map(r, stacked_params)

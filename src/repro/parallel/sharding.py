@@ -1,0 +1,57 @@
+"""Concrete sharding trees for params / optimizer state / caches / batches."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import model as M
+from repro.optim.adamw import OptState
+from repro.parallel.api import axes_leaves, logical_spec
+
+
+def _zip_spec(shapes_tree, axes_tree, mesh) -> object:
+    """Map (ShapeDtypeStruct, logical axes) leaves -> NamedSharding tree."""
+    flat_s, treedef = jax.tree_util.tree_flatten(shapes_tree)
+    flat_a = axes_leaves(axes_tree)
+    assert len(flat_s) == len(flat_a), (len(flat_s), len(flat_a))
+    out = [NamedSharding(mesh, logical_spec(s.shape, a, mesh)) for s, a in zip(flat_s, flat_a)]
+    return treedef.unflatten(out)
+
+
+def params_sharding(cfg: ModelConfig, mesh: Mesh, dtype=jnp.bfloat16):
+    shapes, axes = M.abstract_params(cfg, dtype)
+    return _zip_spec(shapes, axes, mesh), shapes
+
+
+def opt_sharding(cfg: ModelConfig, mesh: Mesh, run: RunConfig, param_shapes):
+    """Moments shard exactly like the params (FSDP/ZeRO: state lives with shard)."""
+    _, axes = M.abstract_params(cfg)
+    mdt = jnp.dtype(run.moment_dtype)
+    mom_shapes = jax.tree_util.tree_map(lambda s: jax.ShapeDtypeStruct(s.shape, mdt), param_shapes)
+    mom_shard = _zip_spec(mom_shapes, axes, mesh)
+    state_shapes = OptState(step=jax.ShapeDtypeStruct((), jnp.int32), m=mom_shapes, v=mom_shapes)
+    state_shard = OptState(step=NamedSharding(mesh, P()), m=mom_shard, v=mom_shard)
+    return state_shard, state_shapes
+
+
+def cache_sharding(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shapes, axes = M.abstract_cache(cfg, batch, max_len, dtype)
+    return _zip_spec(shapes, axes, mesh), shapes
+
+
+_BATCH_AXES = {
+    "tokens": ("batch", None),
+    "labels": ("batch", None),
+    "img_embeds": ("batch", None, None),
+    "frames": ("batch", None, None),
+    "enc_out": ("batch", None, None),
+}
+
+
+def batch_sharding(specs: dict, mesh: Mesh):
+    return {
+        k: NamedSharding(mesh, logical_spec(v.shape, _BATCH_AXES[k], mesh))
+        for k, v in specs.items()
+    }

@@ -1,0 +1,12 @@
+from repro.runtime.supervisor import Supervisor, SimulatedFailure, FailureInjector
+from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.elastic import shrink_mesh, reshard_state
+
+__all__ = [
+    "Supervisor",
+    "SimulatedFailure",
+    "FailureInjector",
+    "StragglerMonitor",
+    "shrink_mesh",
+    "reshard_state",
+]

@@ -1,0 +1,57 @@
+"""Elastic re-meshing: rebuild a smaller mesh after node loss and reshard.
+
+The production flow on real hardware: coordinator notices missing hosts →
+re-runs `jax.distributed.initialize` with the survivors → rebuilds the mesh
+with a shrunken data axis → restores the latest checkpoint under the new
+shardings (the checkpoint layer stores whole logical arrays, so any mesh works)
+→ replays the data pipeline from the step counter (stateless pipeline).
+
+Here the same code path is exercised on host-platform devices: `shrink_mesh`
+drops a data-axis slice, `reshard_state` device_puts a state tree under the
+new mesh's shardings. The batch size contract: global batch stays fixed, so
+the per-replica batch grows (grad_accum absorbs it — `rebalance_grad_accum`).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.parallel.api import axes_leaves, logical_spec
+
+
+def shrink_mesh(mesh: Mesh, lost_data_slices: int = 1) -> Mesh:
+    """Drop the last `lost_data_slices` rows of the data axis (failed hosts)."""
+    devs = mesh.devices
+    axes = mesh.axis_names
+    di = axes.index("data")
+    keep = devs.shape[di] - lost_data_slices
+    if keep < 1:
+        raise ValueError("cannot shrink data axis below 1")
+    sl = [slice(None)] * devs.ndim
+    sl[di] = slice(0, keep)
+    return Mesh(devs[tuple(sl)], axes)
+
+
+def reshard_state(state, axes_tree, new_mesh: Mesh):
+    """device_put every leaf under the new mesh's resolved shardings."""
+    flat_s, treedef = jax.tree_util.tree_flatten(state)
+    flat_a = axes_leaves(axes_tree)
+    assert len(flat_s) == len(flat_a)
+    out = []
+    for leaf, ax in zip(flat_s, flat_a):
+        spec = logical_spec(np.shape(leaf), ax, new_mesh)
+        out.append(jax.device_put(leaf, NamedSharding(new_mesh, spec)))
+    return treedef.unflatten(out)
+
+
+def rebalance_grad_accum(run, old_mesh: Mesh, new_mesh: Mesh):
+    """Keep the global batch fixed: scale grad_accum by the dp shrink factor."""
+    old_dp = math.prod(old_mesh.shape[a] for a in old_mesh.axis_names if a != "model")
+    new_dp = math.prod(new_mesh.shape[a] for a in new_mesh.axis_names if a != "model")
+    if old_dp == new_dp:
+        return run
+    scale = max(1, round(old_dp / new_dp))
+    return run.replace(grad_accum=run.grad_accum * scale)

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# tests must see ONE device (the dry-run sets 512 in its own process only)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,104 @@
+"""Fault tolerance: checkpoint atomicity, restart bit-exactness, stragglers,
+elastic resharding, data-pipeline determinism."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import DEFAULT_RUN, ShapeConfig, get_config
+from repro.data import make_pipeline
+from repro.launch.steps import init_train_state, make_train_step
+from repro.runtime import FailureInjector, StragglerMonitor, Supervisor
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny_setup(tmp, steps=10, fail_at=()):
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    run = DEFAULT_RUN.replace(remat="none")
+    shape = ShapeConfig("t", 32, 2, "train")
+    step_fn = jax.jit(make_train_step(cfg, run, steps))
+    state = init_train_state(cfg, run, KEY)
+    pipeline = make_pipeline(cfg, shape, seed=7)
+    ckpt = CheckpointManager(tmp, keep=2)
+    sup = Supervisor(train_step=step_fn, pipeline=pipeline, ckpt=ckpt,
+                     checkpoint_every=3,
+                     injector=FailureInjector(fail_at=fail_at) if fail_at else None)
+    return sup, state, ckpt
+
+
+def test_checkpoint_roundtrip_and_keep_k(tmp_path):
+    ckpt = CheckpointManager(tmp_path, keep=2)
+    tree = {"a": jnp.arange(5, dtype=jnp.float32), "n": {"b": jnp.ones((2, 3))}}
+    for s in (1, 2, 3, 4):
+        ckpt.save(s, tree, extra={"step": s}, block=True)
+    assert ckpt.all_steps() == [3, 4]  # keep-k retention
+    restored, meta = ckpt.restore(tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(5))
+    assert meta["step"] == 4
+
+
+def test_restart_is_bit_exact(tmp_path):
+    """Uninterrupted run == run with an injected crash + restore."""
+    sup1, state1, _ = _tiny_setup(tmp_path / "a", steps=10)
+    _, hist1 = sup1.run(state1, 10)
+
+    sup2, state2, _ = _tiny_setup(tmp_path / "b", steps=10, fail_at=(7,))
+    _, hist2 = sup2.run(state2, 10)
+
+    # the crashed run restores step 6's checkpoint and replays 6..9; final
+    # losses must agree exactly (stateless pipeline + deterministic step)
+    l1 = {h["step"]: h["loss"] for h in hist1}
+    l2 = {h["step"]: h["loss"] for h in hist2}
+    for s in range(10):
+        assert abs(l1[s] - l2[s]) < 1e-6, (s, l1[s], l2[s])
+
+
+def test_atomic_commit_no_partial_checkpoint(tmp_path):
+    ckpt = CheckpointManager(tmp_path, keep=3)
+    tree = {"w": jnp.ones(4)}
+    ckpt.save(5, tree, block=True)
+    # a leftover tmp dir (simulated crash mid-write) is never listed
+    (tmp_path / "tmp.9").mkdir()
+    (tmp_path / "step_00000009").mkdir()  # no arrays.npz -> incomplete
+    assert ckpt.all_steps() == [5]
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(z_thresh=3.0, warmup_steps=3)
+    for s in range(20):
+        mon.observe(s, 0.10 + 0.001 * (s % 3))
+    assert not mon.flagged
+    mon.observe(20, 0.9)  # a 9x step
+    assert len(mon.flagged) == 1 and mon.flagged[0][0] == 20
+
+
+def test_pipeline_determinism_and_host_sharding():
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    shape = ShapeConfig("t", 16, 8, "train")
+    p1 = make_pipeline(cfg, shape, seed=3)
+    p2 = make_pipeline(cfg, shape, seed=3)
+    np.testing.assert_array_equal(p1.batch_at(11)["tokens"], p2.batch_at(11)["tokens"])
+    assert not np.array_equal(p1.batch_at(11)["tokens"], p1.batch_at(12)["tokens"])
+    # host sharding: two hosts produce different shards of the right size
+    h0 = make_pipeline(cfg, shape, seed=3, n_hosts=2, host_id=0)
+    h1 = make_pipeline(cfg, shape, seed=3, n_hosts=2, host_id=1)
+    b0, b1 = h0.batch_at(0)["tokens"], h1.batch_at(0)["tokens"]
+    assert b0.shape == (4, 16) and b1.shape == (4, 16)
+    assert not np.array_equal(b0, b1)
+    # labels are next-token shifted
+    b = p1.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_prefetch_iterator_resumes():
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    shape = ShapeConfig("t", 16, 4, "train")
+    p = make_pipeline(cfg, shape, seed=1)
+    it = p.iterate(start_step=5)
+    first = next(it)
+    np.testing.assert_array_equal(first["tokens"], p.batch_at(5)["tokens"])

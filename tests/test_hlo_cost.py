@@ -1,0 +1,85 @@
+"""Loop-aware HLO cost analysis vs XLA's own on loop-free programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import collective_stats
+from repro.launch.hlo_cost import analyze
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_matches_xla_on_unrolled():
+    def f(x, w):
+        for _ in range(10):
+            x = jnp.tanh(x @ w)
+        return x
+
+    c = _compile(f, jax.ShapeDtypeStruct((128, 256), jnp.float32),
+                 jax.ShapeDtypeStruct((256, 256), jnp.float32))
+    xla = c.cost_analysis()
+    mine = analyze(c.as_text())
+    assert abs(mine["flops"] - xla["flops"]) / xla["flops"] < 0.05
+    assert abs(mine["bytes"] - xla["bytes accessed"]) / xla["bytes accessed"] < 0.3
+
+
+def test_scan_multiplied_by_trip_count():
+    def f_scan(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    def f_one(x, w):
+        return jnp.tanh(x @ w)
+
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    scan_flops = analyze(_compile(f_scan, a, w).as_text())["flops"]
+    one_flops = analyze(_compile(f_one, a, w).as_text())["flops"]
+    ratio = scan_flops / one_flops
+    assert 9.0 < ratio < 11.5
+
+
+def test_nested_scan():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, c, None, length=4)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    flops = analyze(_compile(f, a, w).as_text())["flops"]
+    expect = 2 * 64 * 64 * 64 * 12
+    assert abs(flops - expect) / expect < 0.1
+
+
+def test_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+
+    c = _compile(f, jax.ShapeDtypeStruct((32, 100), jnp.float32),
+                 jax.ShapeDtypeStruct((100, 48), jnp.float32))
+    flops = analyze(c.as_text())["flops"]
+    assert abs(flops - 2 * 32 * 100 * 48) <= 2 * 32 * 48  # +- elementwise noise
+
+
+def test_collective_stats_parse():
+    hlo = """
+ENTRY %main (p: f32[16,16]) -> f32[16,16] {
+  %p = f32[16,16]{1,0} parameter(0)
+  %ag = f32[32,16]{1,0} all-gather(%p), dimensions={0}
+  %ar = f32[16,16]{1,0} all-reduce(%p), to_apply=%sum
+  ROOT %r = f32[16,16]{1,0} add(%ar, %ar)
+}
+"""
+    s = collective_stats(hlo)
+    assert s["bytes_by_kind"]["all-gather"] == 32 * 16 * 4
+    assert s["bytes_by_kind"]["all-reduce"] == 16 * 16 * 4
+    assert s["counts"]["all-gather"] == 1

@@ -1,0 +1,122 @@
+"""Pallas kernel sweeps (interpret mode) vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import synth_feature_map
+from repro.kernels.bsr_matmul.ops import block_schedule, sparse_matmul
+from repro.kernels.bsr_matmul.ref import bsr_matmul_ref, bsr_matmul_schedule_ref
+from repro.kernels.bsr_matmul.kernel import bsr_matmul_pallas
+from repro.kernels.conv_pool.ops import fused_conv_pool
+from repro.kernels.conv_pool.ref import conv_pool_ref
+from repro.kernels.ecr_conv.ops import channel_block_occupancy, ecr_conv
+from repro.kernels.ecr_conv.ref import ecr_conv_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _sparse(shape, sparsity, seed=0, dtype=jnp.float32):
+    return synth_feature_map(jax.random.PRNGKey(seed), shape, sparsity, dtype)
+
+
+# ---------------------------------------------------------------------------
+# bsr_matmul: shape x dtype x sparsity sweep
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t,f,d", [(8, 128, 128), (16, 256, 128), (40, 512, 384),
+                                   (7, 100, 50), (64, 384, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sparsity", [0.0, 0.6, 0.97])
+def test_bsr_matmul_sweep(t, f, d, dtype, sparsity):
+    h = _sparse((t, f), sparsity, seed=t + d, dtype=dtype).reshape(t, f)
+    w = jax.random.normal(jax.random.PRNGKey(1), (f, d), dtype)
+    y = sparse_matmul(h, w)
+    ref = bsr_matmul_ref(h, w)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_bsr_schedule_matches_oracle_schedule():
+    """Separates schedule bugs from kernel bugs (ECR compaction semantics)."""
+    h = np.array(jax.random.normal(KEY, (16, 512)))
+    h[0:8, 128:256] = 0
+    h[8:16, 0:384] = 0
+    h = jnp.asarray(h)
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 128))
+    ids, cnt = block_schedule(h, 8, 128)
+    assert int(cnt[0]) == 3 and int(cnt[1]) == 1
+    ref = bsr_matmul_schedule_ref(h, w, np.asarray(ids), np.asarray(cnt), (8, 128, 128))
+    y = bsr_matmul_pallas(h, w, ids, cnt, block=(8, 128, 128))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(bsr_matmul_ref(h, w)), atol=1e-4)
+
+
+def test_bsr_all_zero_rows():
+    h = jnp.zeros((16, 256))
+    w = jax.random.normal(KEY, (256, 128))
+    y = sparse_matmul(h, w)
+    assert np.asarray(jnp.abs(y)).max() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# ecr_conv: channels x stride x dtype sweep, dead channel blocks
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("c,o,hw", [(8, 8, 14), (16, 16, 10), (16, 8, 7), (3, 4, 9)])
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ecr_conv_sweep(c, o, hw, stride, dtype):
+    x = np.array(_sparse((c, hw, hw), 0.6, seed=c * hw, dtype=jnp.float32))
+    if c >= 16:
+        x[c // 2 : c // 2 + 8] = 0.0  # a dead channel block
+    x = jnp.asarray(x, dtype)
+    k = jax.random.normal(jax.random.PRNGKey(2), (o, c, 3, 3), dtype)
+    y = ecr_conv(x, k, stride=stride, block_c=8, block_o=8)
+    ref = ecr_conv_ref(x, k, stride)
+    tol = 2e-4 if dtype == jnp.float32 else 8e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_ecr_conv_all_zero_input():
+    x = jnp.zeros((8, 10, 10))
+    k = jax.random.normal(KEY, (8, 8, 3, 3))
+    y = ecr_conv(x, k, block_c=8, block_o=8)
+    assert np.asarray(jnp.abs(y)).max() == 0.0
+
+
+def test_channel_block_occupancy():
+    x = np.array(_sparse((16, 8, 8), 0.3))
+    x[0:8] = 0
+    occ = channel_block_occupancy(jnp.asarray(x), block_c=8)
+    assert occ == 0.5
+
+
+# ---------------------------------------------------------------------------
+# conv_pool fused kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("c,o,hw", [(8, 8, 11), (16, 8, 9)])
+@pytest.mark.parametrize("pool", [2, 3])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv_pool_sweep(c, o, hw, pool, dtype):
+    x = _sparse((c, hw, hw), 0.5, seed=hw, dtype=dtype)
+    k = jax.random.normal(jax.random.PRNGKey(3), (o, c, 3, 3), dtype)
+    y = fused_conv_pool(x, k, stride=1, pool=pool, block_c=8, block_o=8)
+    ref = conv_pool_ref(x, k, 1, pool)
+    tol = 2e-4 if dtype == jnp.float32 else 8e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_conv_pool_relu_applied():
+    """PECR applies ReLU before pooling (paper §V-D): outputs must be >= 0."""
+    x = _sparse((8, 10, 10), 0.2)
+    k = -jnp.abs(jax.random.normal(KEY, (8, 8, 3, 3)))  # all-negative conv
+    y = fused_conv_pool(x, k, block_c=8, block_o=8)
+    assert float(y.min()) >= 0.0

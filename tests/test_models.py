@@ -1,0 +1,111 @@
+"""Per-arch smoke tests + the decode-vs-teacher-forcing equivalence checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+ARCHS = [a for a in list_archs() if a != "vgg19-sparse"]
+
+
+def _batch(cfg, b, s, with_labels=True):
+    batch = {"tokens": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size, jnp.int32)}
+    if with_labels:
+        batch["labels"] = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                             cfg.vocab_size, jnp.int32)
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jax.random.normal(KEY, (b, cfg.n_image_tokens, cfg.d_model)) * 0.02
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(KEY, (b, s, cfg.d_model)) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward + one train step, shape + no-NaN asserts."""
+    cfg = get_config(arch, reduced=True)
+    params, _ = M.init_params(cfg, KEY)
+    b, s = 2, 16
+    batch = _batch(cfg, b, s)
+    logits, _, aux = M.forward(cfg, params, batch)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    loss, grads = jax.value_and_grad(lambda p: M.lm_loss(cfg, p, batch))(params)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "deepseek-v2-236b", "jamba-v0.1-52b",
+                                  "xlstm-125m", "whisper-tiny"])
+def test_decode_matches_teacher_forcing(arch):
+    """prefill+decode token-by-token must reproduce the full forward logits —
+    the strongest correctness check of every cache path (KV, MLA latent,
+    mamba/xlstm recurrent state)."""
+    import dataclasses
+
+    cfg = get_config(arch, reduced=True)
+    if cfg.n_experts:
+        # capacity DROPS are batch-composition-dependent (GShard semantics), so
+        # exact decode==teacher-forcing equivalence requires no-drop capacity.
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    params, _ = M.init_params(cfg, KEY)
+    b, s = 2, 12
+    batch = _batch(cfg, b, s, with_labels=False)
+    full_logits, _, _ = M.forward(cfg, params, batch)
+
+    caches, _ = M.init_cache(cfg, b, s + 4, jnp.float32)
+    pre_len = 5
+    pre = {k: (v[:, :pre_len] if k == "tokens" else v) for k, v in batch.items()}
+    logits_p, caches = M.prefill(cfg, params, caches, pre)
+    np.testing.assert_allclose(np.asarray(logits_p, np.float32),
+                               np.asarray(full_logits[:, :pre_len], np.float32),
+                               rtol=2e-3, atol=2e-3)
+    # token-by-token decode for the rest
+    if cfg.is_encoder_decoder:
+        # reproduce encoder output once (frames path)
+        from repro.models.layers import rms_norm, sinusoid_positions
+        from repro.models.model import AUDIO_ENC_LAYOUT
+        from repro.models.transformer import stack_apply
+        fr = batch["frames"]
+        pe = sinusoid_positions(fr.shape[1], cfg.d_model, fr.dtype)
+        enc_pos = jnp.broadcast_to(jnp.arange(fr.shape[1])[None], fr.shape[:2])
+        enc_out, _, _ = stack_apply(params["enc_groups"], fr + pe[None], cfg=cfg,
+                                    positions=enc_pos, causal=False, layout=AUDIO_ENC_LAYOUT)
+        enc_out = rms_norm(enc_out, params["enc_norm"], cfg.norm_eps)
+    for t in range(pre_len, s):
+        dec = {"tokens": batch["tokens"][:, t : t + 1]}
+        if cfg.family == "vlm":
+            dec["img_embeds"] = batch["img_embeds"]
+        if cfg.is_encoder_decoder:
+            dec["enc_out"] = enc_out
+        lg, caches = M.decode_step(cfg, params, caches, dec, jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0], np.float32),
+            np.asarray(full_logits[:, t], np.float32),
+            rtol=3e-3, atol=3e-3,
+        )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_counts_match_spec(arch):
+    """Full configs land near the advertised sizes (sanity of the model math)."""
+    spec_sizes = {
+        "stablelm-12b": 12e9, "mistral-large-123b": 123e9, "minitron-8b": 8e9,
+        "qwen3-0.6b": 0.6e9, "xlstm-125m": 0.125e9, "arctic-480b": 480e9,
+        "deepseek-v2-236b": 236e9, "jamba-v0.1-52b": 52e9,
+        "llama-3.2-vision-90b": 90e9, "whisper-tiny": 0.039e9,
+    }
+    cfg = get_config(arch)
+    n = M.count_params_analytic(cfg)
+    target = spec_sizes[arch]
+    assert 0.55 * target <= n <= 1.45 * target, (arch, n, target)
+
+
+def test_long_context_flags():
+    assert get_config("xlstm-125m").supports_long_context
+    assert get_config("jamba-v0.1-52b").supports_long_context
+    assert not get_config("mistral-large-123b").supports_long_context
