@@ -26,18 +26,24 @@ def time_fn(f, *args, iters: int = 5, warmup: int = 2) -> float:
     return float(np.median(ts) * 1e6)
 
 
-def modeled_tpu_us(c, h, w, o, kh, kw, stride, occupancy: float, dtype_bytes=2) -> dict:
-    """Roofline-modeled TPU time for dense vs block-ECR conv of one map.
+def modeled_tpu_us(c, h, w, o, kh, kw, stride, occupancy: float, dtype_bytes=2,
+                   batch: int = 1) -> dict:
+    """Roofline-modeled TPU time (us/IMAGE) for dense vs block-ECR conv.
 
     dense: max(MAC-time, HBM-time) with all channel blocks.
     ecr:   same with only `occupancy` fraction of channel blocks (DMA+MXU both
            skip dead blocks — the kernel's gathered schedule).
+    batch: the kernel tensor is read once per OUTPUT BLOCK, not once per
+           sample (the batched grid keeps it resident across the batch), so
+           its bytes amortize by 1/batch; activation and output bytes and the
+           MACs are per-image.
     """
     oh, ow = (h - kh) // stride + 1, (w - kw) // stride + 1
     macs = 2 * oh * ow * o * c * kh * kw
-    bytes_dense = (c * h * w + o * c * kh * kw + o * oh * ow) * dtype_bytes
+    k_bytes = o * c * kh * kw * dtype_bytes / batch
+    bytes_dense = (c * h * w + o * oh * ow) * dtype_bytes + k_bytes
     t_dense = max(macs / PEAK_FLOPS, bytes_dense / HBM_BW) * 1e6
-    bytes_ecr = (occupancy * c * h * w + occupancy * o * c * kh * kw + o * oh * ow) * dtype_bytes
+    bytes_ecr = (occupancy * c * h * w + o * oh * ow) * dtype_bytes + occupancy * k_bytes
     t_ecr = max(occupancy * macs / PEAK_FLOPS, bytes_ecr / HBM_BW) * 1e6
     return {"dense_us": t_dense, "ecr_us": t_ecr,
             "speedup": t_dense / max(t_ecr, 1e-12)}

@@ -1,4 +1,9 @@
-"""Paper Fig. 10: convolution with strides 2 and 3 on the VGG-19 set."""
+"""Paper Fig. 10: convolution with strides 2 and 3 on the VGG-19 layer set.
+
+Claim checked: ECR's advantage survives strided convolution (the paper shows
+comparable speedups at stride 2 and 3 — the compression step is per-window,
+so fewer windows shrink the work on both sides of the comparison). Reuses the
+fig9 row machinery at strides {2, 3} on every other layer."""
 from benchmarks.fig9_vgg19 import rows
 
 

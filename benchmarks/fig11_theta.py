@@ -1,8 +1,10 @@
 """Paper Fig. 11: speedup tracks Θ = (sparsity x 100) / feature-map width.
 
-The paper's claim is the *trend*: deeper layers (smaller, sparser maps) gain
-more. We sweep (size, sparsity), compute Θ and the modeled-TPU speedup +
-MAC reduction, and report the Spearman-style rank agreement between Θ and
+Claim checked: the *trend* — deeper layers (smaller, sparser maps) gain more,
+and Θ is a usable single predictor of the per-layer win (the planner's
+occupancy threshold is the block-granularity version of this predictor). We
+sweep (size, sparsity), compute Θ and the modeled-TPU speedup + MAC
+reduction, and report the Spearman-style rank agreement between Θ and
 speedup — reproducing the figure's monotonicity."""
 from __future__ import annotations
 

@@ -1,9 +1,11 @@
 """Paper Fig. 12: fused conv+ReLU+pool (PECR) vs unfused, per VGG-19 CP group.
 
-Three views of the fusion win:
+Claim checked: fusing the pooling into the convolution (PECR, §V) beats the
+separate conv -> ReLU -> pool pipeline because the conv result never leaves
+fast memory. Three views of the fusion win:
   1. measured CPU wall time fused vs unfused (real, same-machine ratio),
   2. modeled HBM bytes (the paper's CPU<->GPU traffic argument mapped one
-     level down the hierarchy, DESIGN.md §2),
+     level down the hierarchy, DESIGN.md §2.3),
   3. the paper's MAC-reduction metric for the conv inside the fusion.
 """
 from __future__ import annotations

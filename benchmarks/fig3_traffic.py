@@ -1,10 +1,12 @@
 """Paper Fig. 3: share of data-transfer time in conv+pool, per VGG-19 CP group.
 
-The paper measures CPU<->GPU PCIe transfer vs compute with cuDNN-style
-separate kernels. The TPU mapping (DESIGN.md §2): the equivalent traffic is
-(a) host->HBM once per network input (amortized), and (b) HBM<->VMEM between
-the unfused conv and pool stages. We model both from the layer shapes and the
-roofline constants and report the transfer share that PECR's fusion removes."""
+Claim checked: data movement — not MACs — dominates the unfused conv+pool
+pipeline, which is the motivation for PECR's fusion (§V). The paper measures
+CPU<->GPU PCIe transfer vs compute with cuDNN-style separate kernels. The TPU
+mapping (DESIGN.md §2.3): the equivalent traffic is (a) host->HBM once per
+network input (amortized), and (b) HBM<->VMEM between the unfused conv and
+pool stages. We model both from the layer shapes and the roofline constants
+and report the transfer share that PECR's fusion removes."""
 from __future__ import annotations
 
 from benchmarks._util import HBM_BW, PEAK_FLOPS, VGG19_CONVS

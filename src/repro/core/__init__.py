@@ -5,7 +5,17 @@
 - Sparsity machinery shared with the LM stack: `repro.core.sparsity`
 - The technique lifted to FFNs: `repro.core.sparse_ffn`
 """
-from repro.core.ecr import ECR, conv2d, conv2d_dense, conv2d_ecr, conv2d_im2col, ecr_compress, ecr_spmv
+from repro.core.ecr import (
+    ECR,
+    compact_live_channels,
+    compact_live_channels_batch,
+    conv2d,
+    conv2d_dense,
+    conv2d_ecr,
+    conv2d_im2col,
+    ecr_compress,
+    ecr_spmv,
+)
 from repro.core.pecr import PECR, conv_pool, conv_pool_pecr, conv_pool_unfused, pecr_compress, pecr_conv_pool
 from repro.core.sparsity import block_occupancy, compact_block_ids, synth_feature_map, window_stats
 
@@ -14,6 +24,8 @@ __all__ = [
     "PECR",
     "block_occupancy",
     "compact_block_ids",
+    "compact_live_channels",
+    "compact_live_channels_batch",
     "conv2d",
     "conv2d_dense",
     "conv2d_ecr",

@@ -17,9 +17,12 @@ skipped-op counts, and the TPU-profitable realization is the block-sparse
 Pallas kernel in `repro.kernels.ecr_conv` (scalar-prefetched occupancy ==
 block-granularity Ptr).
 
-Layout conventions: feature maps are (C, H, W); kernels are (C, kh, kw) for
-one output channel, or (O, C, kh, kw); padding is VALID (the paper's setting),
-stride configurable (paper evaluates 1, 2, 3).
+Layout conventions: feature maps are (C, H, W) or batched (N, C, H, W);
+kernels are (C, kh, kw) for one output channel, or (O, C, kh, kw); padding is
+VALID (the paper's setting), stride configurable (paper evaluates 1, 2, 3).
+Batched inputs vmap the per-image algorithms (the kernel tensor is shared
+across the batch — the batch-level reuse of Shi & Chu); the TPU-profitable
+batched realization is the native batched grid in `repro.kernels.ecr_conv`.
 """
 from __future__ import annotations
 
@@ -53,11 +56,17 @@ class ECR:
 
 @partial(jax.jit, static_argnames=("kh", "kw", "stride"))
 def ecr_compress(x: jax.Array, kernel: jax.Array, kh: int, kw: int, stride: int = 1) -> ECR:
-    """Algorithm 1 (vectorized over windows): extension + compression fused."""
+    """Algorithm 1 (vectorized over windows): extension + compression fused.
+
+    x: (C,H,W) one image, or (N,C,H,W) a batch — batched form returns an ECR
+    whose f_data/k_data/ptr carry a leading batch dim (shared out_shape).
+    """
     if x.ndim == 2:
         x = x[None]
     if kernel.ndim == 2:
         kernel = kernel[None]
+    if x.ndim == 4:
+        return jax.vmap(lambda xi: ecr_compress(xi, kernel, kh, kw, stride))(x)
     wins = extract_windows(x, kh, kw, stride)  # (oh, ow, K)
     oh, ow, K = wins.shape
     rows = wins.reshape(-1, K)
@@ -80,12 +89,16 @@ def ecr_compress(x: jax.Array, kernel: jax.Array, kh: int, kw: int, stride: int 
 
 @jax.jit
 def ecr_spmv(ecr: ECR) -> jax.Array:
-    """Algorithm 2: one SpMV row -> one convolution output."""
-    lane = jnp.arange(ecr.f_data.shape[1])[None, :]
-    live = lane < jnp.maximum(ecr.ptr, 0)[:, None]
-    out = jnp.sum(jnp.where(live, ecr.f_data * ecr.k_data, 0.0), axis=1)
+    """Algorithm 2: one SpMV row -> one convolution output.
+
+    Accepts single-image ECR (2-D f_data) or batched ECR (3-D f_data, from a
+    batched `ecr_compress`) and returns (oh, ow) / (N, oh, ow) accordingly.
+    """
+    lane = jnp.arange(ecr.f_data.shape[-1])
+    live = lane < jnp.maximum(ecr.ptr, 0)[..., None]
+    out = jnp.sum(jnp.where(live, ecr.f_data * ecr.k_data, 0.0), axis=-1)
     out = jnp.where(ecr.ptr == -1, 0.0, out)  # Algorithm 2 line 1-2
-    return out.reshape(ecr.out_shape)
+    return out.reshape(out.shape[:-1] + ecr.out_shape)
 
 
 # ---------------------------------------------------------------------------
@@ -112,16 +125,35 @@ def compact_live_channels(x: jax.Array, kernels: jax.Array):
     return x[order], kernels[:, order], n_live
 
 
+def compact_live_channels_batch(x: jax.Array, kernels: jax.Array):
+    """Batched channel compaction with ONE shared permutation.
+
+    A per-sample permutation would need a per-sample copy of the kernel
+    tensor, defeating the batch-level weight reuse the batched kernels exist
+    for. Instead the pack is over the *union* of live channels across the
+    batch (a channel is kept if any sample uses it); per-sample raggedness is
+    recovered downstream by per-sample block-occupancy schedules on the packed
+    tensor. Returns (x_packed (N,C,H,W), kernels_packed, n_live_union).
+    """
+    live = jnp.any(x != 0, axis=(0, 2, 3))  # (C,) union over batch + space
+    order = jnp.argsort(~live, stable=True).astype(jnp.int32)
+    n_live = live.sum().astype(jnp.int32)
+    return x[:, order], kernels[:, order], n_live
+
+
 # ---------------------------------------------------------------------------
-# Public conv entry points
+# Public conv entry points — (C,H,W) single image or (N,C,H,W) batch
 # ---------------------------------------------------------------------------
 
 
 def conv2d_ecr(x: jax.Array, kernels: jax.Array, stride: int = 1) -> jax.Array:
-    """Sparse convolution via ECR. x: (C,H,W); kernels: (O,C,kh,kw) -> (O,oh,ow).
+    """Sparse convolution via ECR. x: (C,H,W) -> (O,oh,ow), or batched
+    (N,C,H,W) -> (N,O,oh,ow); kernels: (O,C,kh,kw), shared across the batch.
 
     Multi-channel handling per paper §V-E: all channels of a window are
-    compressed together, then SpMV runs once.
+    compressed together, then SpMV runs once. The batch dim rides the batched
+    ECR format: compression is per-sample, the kernel taps are gathered once
+    per output channel.
     """
     if kernels.ndim == 3:
         kernels = kernels[None]
@@ -130,23 +162,28 @@ def conv2d_ecr(x: jax.Array, kernels: jax.Array, stride: int = 1) -> jax.Array:
     def per_out(kern):
         return ecr_spmv(ecr_compress(x, kern, kh, kw, stride))
 
-    return jax.vmap(per_out)(kernels)
+    out = jax.vmap(per_out)(kernels)  # (O, ...) — batch dim, if any, is axis 1
+    return jnp.moveaxis(out, 0, 1) if x.ndim == 4 else out
 
 
 def conv2d_dense(x: jax.Array, kernels: jax.Array, stride: int = 1) -> jax.Array:
-    """Dense baseline (the cuDNN stand-in): lax conv, VALID padding."""
+    """Dense baseline (the cuDNN stand-in): lax conv, VALID padding.
+
+    (C,H,W) -> (O,oh,ow) or (N,C,H,W) -> (N,O,oh,ow) (native lax batching).
+    """
     if x.ndim == 2:
         x = x[None]
     if kernels.ndim == 3:
         kernels = kernels[None]
+    batched = x.ndim == 4
     out = jax.lax.conv_general_dilated(
-        x[None].astype(jnp.float32),
+        (x if batched else x[None]).astype(jnp.float32),
         kernels.astype(jnp.float32),
         window_strides=(stride, stride),
         padding="VALID",
         dimension_numbers=("NCHW", "OIHW", "NCHW"),
     )
-    return out[0]
+    return out if batched else out[0]
 
 
 def conv2d_im2col(x: jax.Array, kernels: jax.Array, stride: int = 1) -> jax.Array:
@@ -155,6 +192,8 @@ def conv2d_im2col(x: jax.Array, kernels: jax.Array, stride: int = 1) -> jax.Arra
         x = x[None]
     if kernels.ndim == 3:
         kernels = kernels[None]
+    if x.ndim == 4:
+        return jax.vmap(lambda xi: conv2d_im2col(xi, kernels, stride))(x)
     o, c, kh, kw = kernels.shape
     wins = extract_windows(x, kh, kw, stride)  # (oh, ow, K)
     oh, ow, K = wins.shape

@@ -42,9 +42,15 @@ class PECR:
 
 @partial(jax.jit, static_argnames=("kh", "kw", "c_s", "p", "p_s"))
 def pecr_compress(x: jax.Array, kh: int, kw: int, c_s: int = 1, p: int = 2, p_s: int | None = None) -> PECR:
-    """Algorithm 3, vectorized. One row of `data` = one pooling unit."""
+    """Algorithm 3, vectorized. One row of `data` = one pooling unit.
+
+    x: (C,H,W) one image, or (N,C,H,W) a batch — batched form returns a PECR
+    whose data/index/count carry a leading batch dim (shared out_shape).
+    """
     if x.ndim == 2:
         x = x[None]
+    if x.ndim == 4:
+        return jax.vmap(lambda xi: pecr_compress(xi, kh, kw, c_s, p, p_s))(x)
     p_s = p if p_s is None else p_s  # pooling stride (paper uses p_s == p or 1)
     wins = extract_windows(x, kh, kw, c_s)  # (oh, ow, K) conv windows
     oh, ow, K = wins.shape
@@ -75,15 +81,19 @@ def pecr_compress(x: jax.Array, kh: int, kw: int, c_s: int = 1, p: int = 2, p_s:
 
 @jax.jit
 def pecr_conv_pool(pecr: PECR, kernel: jax.Array) -> jax.Array:
-    """Algorithm 4: per pooling unit, p*p SpMVs -> ReLU -> max."""
+    """Algorithm 4: per pooling unit, p*p SpMVs -> ReLU -> max.
+
+    Accepts single-image PECR (3-D data) or batched PECR (4-D data, from a
+    batched `pecr_compress`); the kernel is shared across the batch.
+    """
     kvec = kernel.reshape(-1)
-    taps = kvec[pecr.index]  # (n_pool, p*p, K)
-    lane = jnp.arange(pecr.data.shape[-1])[None, None, :]
+    taps = kvec[pecr.index]  # (..., n_pool, p*p, K)
+    lane = jnp.arange(pecr.data.shape[-1])
     live = lane < pecr.count[..., None]
-    conv = jnp.sum(jnp.where(live, pecr.data * taps, 0.0), axis=-1)  # (n_pool, p*p)
+    conv = jnp.sum(jnp.where(live, pecr.data * taps, 0.0), axis=-1)  # (..., n_pool, p*p)
     conv = jnp.maximum(conv, 0.0)  # ReLU, paper §V-D
     pooled = conv.max(axis=-1)
-    return pooled.reshape(pecr.out_shape)
+    return pooled.reshape(pooled.shape[:-1] + pecr.out_shape)
 
 
 # ---------------------------------------------------------------------------
@@ -92,7 +102,11 @@ def pecr_conv_pool(pecr: PECR, kernel: jax.Array) -> jax.Array:
 
 
 def conv_pool_pecr(x, kernels, c_s: int = 1, p: int = 2, p_s: int | None = None):
-    """(C,H,W) x (O,C,kh,kw) -> (O, n_poh, n_pow) fused conv+ReLU+maxpool."""
+    """(C,H,W) x (O,C,kh,kw) -> (O, n_poh, n_pow) fused conv+ReLU+maxpool.
+
+    Batched: (N,C,H,W) -> (N, O, n_poh, n_pow); compression is per-sample,
+    the PECR packed tensors carry the batch dim, kernels are shared.
+    """
     if kernels.ndim == 3:
         kernels = kernels[None]
     o, c, kh, kw = kernels.shape
@@ -101,7 +115,8 @@ def conv_pool_pecr(x, kernels, c_s: int = 1, p: int = 2, p_s: int | None = None)
     def per_out(kern):
         return pecr_conv_pool(pecr, kern)
 
-    return jax.vmap(per_out)(kernels)
+    out = jax.vmap(per_out)(kernels)  # (O, ...) — batch dim, if any, is axis 1
+    return jnp.moveaxis(out, 0, 1) if x.ndim == 4 else out
 
 
 def conv_pool_unfused(x, kernels, c_s: int = 1, p: int = 2, p_s: int | None = None):
@@ -109,12 +124,14 @@ def conv_pool_unfused(x, kernels, c_s: int = 1, p: int = 2, p_s: int | None = No
     p_s = p if p_s is None else p_s
     conv = conv2d_dense(x, kernels, c_s)
     conv = jnp.maximum(conv, 0.0)
+    pool_dims = (1,) * (conv.ndim - 2) + (p, p)
+    pool_strides = (1,) * (conv.ndim - 2) + (p_s, p_s)
     return jax.lax.reduce_window(
         conv,
         -jnp.inf,
         jax.lax.max,
-        window_dimensions=(1, p, p),
-        window_strides=(1, p_s, p_s),
+        window_dimensions=pool_dims,
+        window_strides=pool_strides,
         padding="VALID",
     )
 

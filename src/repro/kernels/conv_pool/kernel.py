@@ -11,6 +11,10 @@ output traffic drops by p^2 x and the intermediate write/read pair vanishes.
 Same gathered channel-block sparsity schedule as ecr_conv (ids/cnt == ECR's
 F_data/Ptr at block granularity). Pooling stride == pool size (the VGG/paper
 evaluation setting); the general-stride form lives in the jnp reference.
+
+Batched form (`conv_pool_pallas_batch`): same (n_ob, N, n_cb) grid as the
+batched ECR conv (DESIGN.md §2.4) — per-sample (ids, cnt) schedules, kernel
+block resident across the batch — with the PECR epilogue run per sample.
 """
 from __future__ import annotations
 
@@ -95,5 +99,88 @@ def conv_pool_pallas(
         partial(_kernel, kh=kh, kw=kw, stride=stride, n_cb=n_cb, oh=oh, ow=ow, p=pool),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((poh, pow_, o), out_dtype or x.dtype),
+        interpret=interpret,
+    )(ids, cnt, x, w)
+
+
+# ---------------------------------------------------------------------------
+# Native batched grid (DESIGN.md §2.4)
+# ---------------------------------------------------------------------------
+
+
+def _kernel_batch(ids_ref, cnt_ref, x_ref, w_ref, o_ref, acc_ref, *, kh, kw, stride, n_cb, oh, ow, p):
+    b = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(k < cnt_ref[b])
+    def _mac():
+        x = x_ref[0]  # (H, W, bc) — sample b's channel block ids[b, k]
+        for i in range(kh):
+            for j in range(kw):
+                patch = jax.lax.slice(
+                    x,
+                    (i, j, 0),
+                    (i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, x.shape[2]),
+                    (stride, stride, 1),
+                )
+                acc_ref[...] += jnp.dot(
+                    patch.reshape(oh * ow, -1),
+                    w_ref[i, j],
+                    preferred_element_type=jnp.float32,
+                )
+
+    @pl.when(k == n_cb - 1)
+    def _epilogue():  # PECR: ReLU + max-pool in VMEM, pooled tile is the only HBM write
+        conv = acc_ref[...].reshape(oh, ow, -1)
+        conv = jnp.maximum(conv, 0.0)  # ReLU (paper §V-D)
+        poh, pow_ = oh // p, ow // p
+        pooled = (
+            conv[: poh * p, : pow_ * p, :]
+            .reshape(poh, p, pow_, p, -1)
+            .max(axis=(1, 3))
+        )
+        o_ref[...] = pooled[None].astype(o_ref.dtype)
+
+
+def conv_pool_pallas_batch(
+    x: jax.Array,  # (N, H, W, C)
+    w: jax.Array,  # (kh, kw, C, O) — shared across the batch
+    ids: jax.Array,  # (N, n_cb)
+    cnt: jax.Array,  # (N,)
+    *,
+    stride: int = 1,
+    pool: int = 2,
+    block_c: int = 128,
+    block_o: int = 128,
+    interpret: bool = True,
+    out_dtype=None,
+) -> jax.Array:
+    n, h, wd, c = x.shape
+    kh, kw, c2, o = w.shape
+    assert c == c2 and c % block_c == 0 and o % block_o == 0
+    oh = (h - kh) // stride + 1
+    ow = (wd - kw) // stride + 1
+    poh, pow_ = oh // pool, ow // pool
+    assert poh > 0 and pow_ > 0, "map too small for pooling window"
+    n_cb, n_ob = c // block_c, o // block_o
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_ob, n, n_cb),
+        in_specs=[
+            pl.BlockSpec((1, h, wd, block_c), lambda j, b, k, ids, cnt: (b, 0, 0, ids[b, k])),
+            pl.BlockSpec((kh, kw, block_c, block_o), lambda j, b, k, ids, cnt: (0, 0, ids[b, k], j)),
+        ],
+        out_specs=pl.BlockSpec((1, poh, pow_, block_o), lambda j, b, k, ids, cnt: (b, 0, 0, j)),
+        scratch_shapes=[pltpu.VMEM((oh * ow, block_o), jnp.float32)],
+    )
+    return pl.pallas_call(
+        partial(_kernel_batch, kh=kh, kw=kw, stride=stride, n_cb=n_cb, oh=oh, ow=ow, p=pool),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, poh, pow_, o), out_dtype or x.dtype),
         interpret=interpret,
     )(ids, cnt, x, w)

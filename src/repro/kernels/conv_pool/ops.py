@@ -7,32 +7,49 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sparsity import block_occupancy, compact_block_ids
-from repro.kernels.conv_pool.kernel import conv_pool_pallas
-from repro.kernels.ecr_conv.ops import _pick_block_c
+from repro.kernels.conv_pool.kernel import conv_pool_pallas, conv_pool_pallas_batch
+from repro.kernels.ecr_conv.ops import _pick_block_c, batch_block_schedule
 
 
-@partial(jax.jit, static_argnames=("stride", "pool", "interpret", "block_c", "block_o", "compact"))
+@partial(jax.jit, static_argnames=("stride", "pool", "p_s", "interpret", "block_c", "block_o", "compact"))
 def fused_conv_pool(x_chw, kernels_oihw, stride: int = 1, pool: int = 2,
                     p_s=None, interpret: bool = True, block_c: int = 0,
                     block_o: int = 128, compact: bool = True):
-    """(C,H,W) x (O,C,kh,kw) -> (O, oh//p, ow//p). p_s must equal pool (kernel form)."""
-    from repro.core.ecr import compact_live_channels
+    """(C,H,W) x (O,C,kh,kw) -> (O, oh//p, ow//p). p_s must equal pool (kernel form).
+    Batched: (N,C,H,W) -> (N, O, oh//p, ow//p) through the native batched grid
+    with per-sample channel-block schedules (shared-union compaction)."""
+    from repro.core.ecr import compact_live_channels, compact_live_channels_batch
 
     assert p_s is None or p_s == pool, "pallas kernel supports pooling stride == pool"
     if x_chw.ndim == 2:
         x_chw = x_chw[None]
     if kernels_oihw.ndim == 3:
         kernels_oihw = kernels_oihw[None]
-    c, h, w = x_chw.shape
+    batched = x_chw.ndim == 4
+    c, h, w = x_chw.shape[-3:]
     o, c2, kh, kw = kernels_oihw.shape
-    if compact:
-        x_chw, kernels_oihw, n_live = compact_live_channels(x_chw, kernels_oihw)
     bc = block_c or min(_pick_block_c(h, w, c), max(8, c))
     bo = min(block_o, max(8, o))
     cp, op = (-c) % bc, (-o) % bo
+    n_cb = (c + cp) // bc
+
+    if batched:
+        assert x_chw.shape[0] > 0, "empty batch: fused_conv_pool needs N >= 1"
+        if compact:
+            x_chw, kernels_oihw, _ = compact_live_channels_batch(x_chw, kernels_oihw)
+        x = jnp.pad(x_chw, ((0, 0), (0, cp), (0, 0), (0, 0))).transpose(0, 2, 3, 1)
+        wk = jnp.pad(kernels_oihw, ((0, op), (0, cp), (0, 0), (0, 0))).transpose(2, 3, 1, 0)
+        ids, cnt = batch_block_schedule(x, h, w, bc)
+        out = conv_pool_pallas_batch(
+            x, wk, ids, cnt, stride=stride, pool=pool, block_c=bc, block_o=bo,
+            interpret=interpret,
+        )
+        return out.transpose(0, 3, 1, 2)[:, :o]
+
+    if compact:
+        x_chw, kernels_oihw, n_live = compact_live_channels(x_chw, kernels_oihw)
     x = jnp.pad(x_chw, ((0, cp), (0, 0), (0, 0))).transpose(1, 2, 0)
     wk = jnp.pad(kernels_oihw, ((0, op), (0, cp), (0, 0), (0, 0))).transpose(2, 3, 1, 0)
-    n_cb = (c + cp) // bc
     if compact:
         ids = jnp.arange(n_cb, dtype=jnp.int32)
         cnt = jnp.minimum((n_live + bc - 1) // bc, n_cb).astype(jnp.int32)

@@ -4,16 +4,19 @@ import jax.numpy as jnp
 
 
 def conv_pool_ref(x_chw, kernels_oihw, stride: int = 1, pool: int = 2):
-    """(C,H,W) x (O,C,kh,kw) -> (O, oh//p, ow//p) fp32 ground truth."""
+    """(C,H,W) -> (O, oh//p, ow//p) or batched (N,C,H,W) -> (N, O, oh//p, ow//p)."""
+    batched = x_chw.ndim == 4
     conv = jax.lax.conv_general_dilated(
-        x_chw[None].astype(jnp.float32),
+        (x_chw if batched else x_chw[None]).astype(jnp.float32),
         kernels_oihw.astype(jnp.float32),
         window_strides=(stride, stride),
         padding="VALID",
         dimension_numbers=("NCHW", "OIHW", "NCHW"),
-    )[0]
+    )
     conv = jnp.maximum(conv, 0.0)
-    o, oh, ow = conv.shape
+    oh, ow = conv.shape[-2:]
     poh, pow_ = oh // pool, ow // pool
-    conv = conv[:, : poh * pool, : pow_ * pool]
-    return conv.reshape(o, poh, pool, pow_, pool).max(axis=(2, 4))
+    conv = conv[..., : poh * pool, : pow_ * pool]
+    lead = conv.shape[:-2]
+    pooled = conv.reshape(*lead, poh, pool, pow_, pool).max(axis=(-3, -1))
+    return pooled if batched else pooled[0]

@@ -16,6 +16,12 @@ map is VMEM-resident per channel-block (the paper's shared-memory design —
 its regime is the small, deep, very sparse layers; ops.py shrinks bc to fit a
 VMEM budget for early layers). VALID padding; stride in {1,2,3} as evaluated
 by the paper (Figs 9-10).
+
+Batched form (`ecr_conv_pallas_batch`, DESIGN.md §2.4): grid (n_ob, N, n_cb)
+— output-block j outermost, batch next — so the kernel tensor block for j is
+revisited by every sample before j advances (the batch-level kernel reuse of
+Shi & Chu), with a PER-SAMPLE (ids, cnt) schedule: ids is (N, n_cb) and
+sample b skips its own dead channel blocks via `@pl.when(k < cnt[b])`.
 """
 from __future__ import annotations
 
@@ -89,5 +95,77 @@ def ecr_conv_pallas(
         partial(_kernel, kh=kh, kw=kw, stride=stride, n_cb=n_cb, oh=oh, ow=ow),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((oh, ow, o), out_dtype or x.dtype),
+        interpret=interpret,
+    )(ids, cnt, x, w)
+
+
+# ---------------------------------------------------------------------------
+# Native batched grid (DESIGN.md §2.4)
+# ---------------------------------------------------------------------------
+
+
+def _kernel_batch(ids_ref, cnt_ref, x_ref, w_ref, o_ref, acc_ref, *, kh, kw, stride, n_cb, oh, ow):
+    b = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(k < cnt_ref[b])
+    def _mac():
+        x = x_ref[0]  # (H, W, bc) — sample b's channel block ids[b, k]
+        for i in range(kh):
+            for j in range(kw):
+                patch = jax.lax.slice(
+                    x,
+                    (i, j, 0),
+                    (i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, x.shape[2]),
+                    (stride, stride, 1),
+                )
+                acc_ref[...] += jnp.dot(
+                    patch.reshape(oh * ow, -1),
+                    w_ref[i, j],
+                    preferred_element_type=jnp.float32,
+                )
+
+    @pl.when(k == n_cb - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].reshape(1, oh, ow, -1).astype(o_ref.dtype)
+
+
+def ecr_conv_pallas_batch(
+    x: jax.Array,  # (N, H, W, C)
+    w: jax.Array,  # (kh, kw, C, O) — shared across the batch
+    ids: jax.Array,  # (N, n_cb) per-sample live channel-block gather lists
+    cnt: jax.Array,  # (N,) per-sample live channel-block counts
+    *,
+    stride: int = 1,
+    block_c: int = 128,
+    block_o: int = 128,
+    interpret: bool = True,
+    out_dtype=None,
+) -> jax.Array:
+    n, h, wd, c = x.shape
+    kh, kw, c2, o = w.shape
+    assert c == c2 and c % block_c == 0 and o % block_o == 0
+    oh = (h - kh) // stride + 1
+    ow = (wd - kw) // stride + 1
+    n_cb, n_ob = c // block_c, o // block_o
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_ob, n, n_cb),
+        in_specs=[
+            pl.BlockSpec((1, h, wd, block_c), lambda j, b, k, ids, cnt: (b, 0, 0, ids[b, k])),
+            pl.BlockSpec((kh, kw, block_c, block_o), lambda j, b, k, ids, cnt: (0, 0, ids[b, k], j)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, block_o), lambda j, b, k, ids, cnt: (b, 0, 0, j)),
+        scratch_shapes=[pltpu.VMEM((oh * ow, block_o), jnp.float32)],
+    )
+    return pl.pallas_call(
+        partial(_kernel_batch, kh=kh, kw=kw, stride=stride, n_cb=n_cb, oh=oh, ow=ow),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, o), out_dtype or x.dtype),
         interpret=interpret,
     )(ids, cnt, x, w)

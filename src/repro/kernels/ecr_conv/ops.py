@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sparsity import block_occupancy, compact_block_ids
-from repro.kernels.ecr_conv.kernel import ecr_conv_pallas
+from repro.kernels.ecr_conv.kernel import ecr_conv_pallas, ecr_conv_pallas_batch
 
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # conservative half of v5e VMEM for x tile
 
@@ -19,30 +19,56 @@ def _pick_block_c(h: int, w: int, c: int, dtype_bytes: int = 4) -> int:
     return bc
 
 
+def batch_block_schedule(x_nhwc, h, w, bc):
+    """Per-sample (ids, cnt) channel-block schedules for a batched (N,H,W,C')
+    tensor: each sample skips its own dead blocks (ragged batch sparsity)."""
+    n = x_nhwc.shape[0]
+    occ = block_occupancy(x_nhwc, (h, w, bc)).reshape(n, -1)  # (N, n_cb)
+    return jax.vmap(compact_block_ids)(occ)  # ids (N, n_cb), cnt (N,)
+
+
 @partial(jax.jit, static_argnames=("stride", "interpret", "block_c", "block_o", "compact"))
 def ecr_conv(x_chw, kernels_oihw, stride: int = 1, interpret: bool = True,
              block_c: int = 0, block_o: int = 128, compact: bool = True):
     """(C,H,W) x (O,C,kh,kw) -> (O,oh,ow), skipping dead input channel blocks.
+    Batched: (N,C,H,W) -> (N,O,oh,ow) through the native batched grid.
 
     compact=True (default): ECR channel compaction first — live channels pack
     into a dense prefix so unstructured channel death still becomes contiguous
-    skippable blocks (cnt = ceil(n_live / bc))."""
-    from repro.core.ecr import compact_live_channels
+    skippable blocks (cnt = ceil(n_live / bc)). For a batch the pack uses one
+    shared permutation (union of live channels — kernels stay shared) and
+    per-sample raggedness is recovered by per-sample block schedules."""
+    from repro.core.ecr import compact_live_channels, compact_live_channels_batch
 
     if x_chw.ndim == 2:
         x_chw = x_chw[None]
     if kernels_oihw.ndim == 3:
         kernels_oihw = kernels_oihw[None]
-    c, h, w = x_chw.shape
+    batched = x_chw.ndim == 4
+    c, h, w = x_chw.shape[-3:]
     o, c2, kh, kw = kernels_oihw.shape
-    if compact:
-        x_chw, kernels_oihw, n_live = compact_live_channels(x_chw, kernels_oihw)
     bc = block_c or min(_pick_block_c(h, w, c), max(8, c))
     bo = min(block_o, max(8, o))
     cp, op = (-c) % bc, (-o) % bo
+    n_cb = (c + cp) // bc
+
+    if batched:
+        assert x_chw.shape[0] > 0, "empty batch: ecr_conv needs N >= 1"
+        if compact:
+            x_chw, kernels_oihw, _ = compact_live_channels_batch(x_chw, kernels_oihw)
+        x = jnp.pad(x_chw, ((0, 0), (0, cp), (0, 0), (0, 0))).transpose(0, 2, 3, 1)
+        wk = jnp.pad(kernels_oihw, ((0, op), (0, cp), (0, 0), (0, 0))).transpose(2, 3, 1, 0)
+        ids, cnt = batch_block_schedule(x, h, w, bc)
+        out = ecr_conv_pallas_batch(
+            x, wk, ids, cnt, stride=stride, block_c=bc, block_o=bo,
+            interpret=interpret,
+        )
+        return out.transpose(0, 3, 1, 2)[:, :o]  # (N, O, oh, ow)
+
+    if compact:
+        x_chw, kernels_oihw, n_live = compact_live_channels(x_chw, kernels_oihw)
     x = jnp.pad(x_chw, ((0, cp), (0, 0), (0, 0))).transpose(1, 2, 0)  # (H,W,C')
     wk = jnp.pad(kernels_oihw, ((0, op), (0, cp), (0, 0), (0, 0))).transpose(2, 3, 1, 0)
-    n_cb = (c + cp) // bc
     if compact:
         ids = jnp.arange(n_cb, dtype=jnp.int32)  # identity: prefix is live
         cnt = jnp.minimum((n_live + bc - 1) // bc, n_cb).astype(jnp.int32)

@@ -4,12 +4,13 @@ import jax.numpy as jnp
 
 
 def ecr_conv_ref(x_chw, kernels_oihw, stride: int = 1):
-    """(C,H,W) x (O,C,kh,kw) -> (O,oh,ow) fp32 ground truth."""
+    """(C,H,W) -> (O,oh,ow) or batched (N,C,H,W) -> (N,O,oh,ow), fp32 truth."""
+    batched = x_chw.ndim == 4
     out = jax.lax.conv_general_dilated(
-        x_chw[None].astype(jnp.float32),
+        (x_chw if batched else x_chw[None]).astype(jnp.float32),
         kernels_oihw.astype(jnp.float32),
         window_strides=(stride, stride),
         padding="VALID",
         dimension_numbers=("NCHW", "OIHW", "NCHW"),
     )
-    return out[0]
+    return out if batched else out[0]

@@ -119,7 +119,10 @@ def parse_computations(text: str) -> dict:
         if not mi:
             continue
         name, ty, op, ops, attrs = mi.groups()
-        operands = [o.strip().lstrip("%") for o in ops.split(",") if o.strip().startswith("%")]
+        # operands print either bare ("%x, %y") or typed ("f32[2,3]{1,0} %x,
+        # ..." — newer HLO text); take the %-token of each comma entry
+        operands = [tok.lstrip("%") for o in ops.split(",")
+                    for tok in o.strip().split() if tok.startswith("%")]
         cur.append(Instr(name=name, type_str=ty, opcode=op, operands=operands, attrs=attrs))
     return comps
 
@@ -338,6 +341,17 @@ def analyze(text: str, tags: tuple = ()) -> dict:
                     add_bytes(ins, _type_bytes(ins.type_str))
                 elif op == "dynamic-update-slice" and len(ins.operands) > 1:
                     add_bytes(ins, 2 * _type_bytes(symtab.get(ins.operands[1], "")))
+                elif (op not in ("parameter", "constant", "tuple", "get-tuple-element",
+                                 "bitcast", "after-all", "partition-id", "replica-id",
+                                 "while", "conditional", "call")
+                      and not op.endswith("-start") and not op.endswith("-done")):
+                    # unfused top-level elementwise op: it materializes, so it
+                    # moves operands+result like any other leaf (HloCostAnalysis
+                    # agrees; backends that fuse these never print them bare).
+                    # async -start/-done pairs are excluded: their payload is
+                    # already charged by the collective/copy handling above.
+                    add_bytes(ins, _type_bytes(ins.type_str) + sum(
+                        _type_bytes(symtab.get(o, "")) for o in ins.operands))
         memo[key] = total
         return total
 

@@ -19,6 +19,14 @@ os.environ.setdefault(
 )
 
 import jax
+
+# sharding-invariant RNG: with the legacy non-partitionable threefry, params
+# initialized under `out_shardings` get DIFFERENT values per mesh layout, so
+# the same seed trains a different model on a different topology (and elastic
+# reshards silently change init). Partitionable threefry removes the layout
+# dependence (tests/test_distributed.py pins loss equality across meshes).
+jax.config.update("jax_threefry_partitionable", True)
+
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 

@@ -51,11 +51,23 @@ def init_cnn(key, ccfg: CNNConfig, dtype=jnp.float32) -> dict:
 
 
 def _pad1(x):
-    return jnp.pad(x, ((0, 0), (1, 1), (1, 1)))
+    """1-pixel spatial padding, single image (C,H,W) or batch (N,C,H,W)."""
+    return jnp.pad(x, ((0, 0),) * (x.ndim - 2) + ((1, 1), (1, 1)))
+
+
+def _maxpool(x, p):
+    """Unfused p x p / p max-pool over the trailing two (spatial) dims."""
+    oh, ow = x.shape[-2:]
+    lead = x.shape[:-2]
+    x = x[..., : oh // p * p, : ow // p * p]
+    return x.reshape(*lead, oh // p, p, ow // p, p).max(axis=(-3, -1))
 
 
 def _features(params, img, *, impl: str, ccfg: CNNConfig):
-    """img: (C,H,W) -> (C_out, h, w) after all conv stages."""
+    """(C,H,W) -> (C_out, h, w) after all conv stages; batched (N,C,H,W) ->
+    (N, C_out, h, w). Every conv/conv_pool call carries the whole batch, so
+    each layer is ONE jitted op (batched Pallas grid for the *_pallas impls,
+    native lax / vmapped oracle batching otherwise)."""
     x = img
     p = ccfg.pool_size
     for convs in params["stages"]:
@@ -69,18 +81,55 @@ def _features(params, img, *, impl: str, ccfg: CNNConfig):
                 conv_impl = {"pecr": "ecr", "pecr_pallas": "ecr_pallas"}.get(impl, impl)
                 x = jnp.maximum(conv2d(xp, w, 1, conv_impl), 0.0)
                 if last:
-                    o, oh, ow = x.shape
-                    x = x[:, : oh // p * p, : ow // p * p]
-                    x = x.reshape(o, oh // p, p, ow // p, p).max(axis=(2, 4))
+                    x = _maxpool(x, p)
     return x
 
 
 def cnn_forward(params, img, impl: str = "dense", ccfg: CNNConfig = CNNConfig()):
-    """Single image (C,H,W) -> class logits. vmap for batches."""
+    """(C,H,W) -> class logits, or a batch (N,C,H,W) -> (N, n_classes).
+
+    The batch flows through the conv stack as whole-batch layer calls (not a
+    python loop over samples); see `cnn_forward_batch` for the explicit API.
+    """
     x = _features(params, img, impl=impl, ccfg=ccfg)
-    x = x.reshape(-1)
+    x = x.reshape(x.shape[0], -1) if img.ndim == 4 else x.reshape(-1)
     x = jnp.maximum(x @ params["fc1"], 0.0)
     return x @ params["fc2"]
+
+
+def cnn_forward_batch(params, imgs, impl: str = "dense", ccfg: CNNConfig = CNNConfig()):
+    """Batched inference entry point: (N,C,H,W) -> (N, n_classes) logits.
+
+    Each conv layer runs once over the whole batch: the dense path uses lax's
+    native NCHW batching, the ECR/PECR oracles carry the batch dim through the
+    compressed formats, and the Pallas paths use the (n_ob, N, n_cb) batched
+    grid with per-sample channel-block schedules (DESIGN.md §2.4).
+    """
+    assert imgs.ndim == 4, f"expected (N,C,H,W), got {imgs.shape}"
+    return cnn_forward(params, imgs, impl=impl, ccfg=ccfg)
+
+
+def shift_dead_channels(params, rate: float = 0.04, shift: float = 0.12):
+    """Emulate trained-net activation statistics on random-init params.
+
+    Trained VGG nets lose whole filters to ReLU + BN shift, growing with depth
+    (paper Fig. 2); random init does not. Shift a depth-growing fraction of
+    each conv's output filters negative so ReLU kills those channels — used by
+    `benchmarks/fig2_sparsity.py` and the planner demo to produce realistic
+    channel-block occupancy without trained weights.
+    """
+    shifted = {"stages": [], "fc1": params["fc1"], "fc2": params["fc2"]}
+    depth = 0
+    for convs in params["stages"]:
+        row = []
+        for w in convs:
+            key = jax.random.PRNGKey(depth)
+            bias_mask = (jax.random.uniform(key, (w.shape[0], 1, 1, 1)) <
+                         rate * depth).astype(w.dtype)
+            row.append(w * (1.0 - bias_mask) - shift * bias_mask * jnp.abs(w))
+            depth += 1
+        shifted["stages"].append(row)
+    return shifted
 
 
 def cnn_feature_maps(params, img, ccfg: CNNConfig = CNNConfig()):

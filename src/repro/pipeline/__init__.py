@@ -1,0 +1,24 @@
+"""Batched sparse-CNN inference pipeline (planner + executor).
+
+`plan_network` walks a `CNNConfig` + params with a calibration batch, measures
+the channel-block occupancy each conv layer actually runs at, and decides per
+layer between the dense path, the ECR sparse kernel, and the fused PECR
+conv+ReLU+pool kernel. `run_plan` executes the emitted layer sequence over a
+whole batch, one jitted op per fused layer. Future serving/autotuning PRs
+hang off the `PipelinePlan` artifact (it is a plain, inspectable schedule).
+"""
+from repro.pipeline.planner import (
+    LayerPlan,
+    PipelinePlan,
+    measure_occupancy,
+    plan_network,
+    run_plan,
+)
+
+__all__ = [
+    "LayerPlan",
+    "PipelinePlan",
+    "measure_occupancy",
+    "plan_network",
+    "run_plan",
+]

@@ -1,0 +1,174 @@
+"""Per-layer dense/ECR/PECR planning for batched VGG-style inference.
+
+The paper's win is layer-dependent (Fig. 9: early layers are dense and big,
+deep layers are small and very sparse), so a whole-network setting is always
+wrong somewhere. The planner measures, per conv layer, the channel-block
+occupancy the ECR kernel would actually run at on a calibration batch — the
+post-compaction ceil(n_live/bc)/n_cb of DESIGN.md §2.2, averaged over samples
+— and emits a `PipelinePlan`: one `LayerPlan` per conv, stage-final layers
+fused with their pooling when the sparse path is chosen (PECR) and left as
+conv + unfused pool otherwise.
+
+The plan is a static, hashable schedule: `run_plan` executes it over any
+batch of the calibrated shape, one jitted whole-batch op per layer. This is
+the seam where serving (plan once, execute per request batch) and autotuning
+(search over thresholds/block sizes, keep the best plan) attach.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.vgg19_sparse import CNNConfig
+from repro.core.ecr import conv2d
+from repro.core.pecr import conv_pool
+from repro.models.cnn import _maxpool, _pad1
+
+
+@dataclass(frozen=True)
+class LayerPlan:
+    """One conv layer's placement decision."""
+
+    index: int  # conv index in network order (0-based)
+    stage: int  # VGG stage
+    slot: int  # index within the stage
+    kind: str  # "conv" | "conv_pool" (stage-final fuses/bundles the pool)
+    impl: str  # "dense" | "ecr_pallas" | "pecr_pallas" | "ecr" | "pecr"
+    occupancy: float  # measured mean channel-block occupancy of the input
+    in_shape: tuple  # (C, H, W) entering the layer (pre-padding)
+    out_shape: tuple  # (C, H, W) leaving the layer (post-pool if any)
+
+
+@dataclass(frozen=True)
+class PipelinePlan:
+    layers: tuple  # tuple[LayerPlan, ...]
+    occ_threshold: float
+    block_c: int  # 0 = auto per layer (ops._pick_block_c)
+
+    def counts(self) -> dict:
+        c = {"dense": 0, "sparse": 0, "fused": 0}
+        for lp in self.layers:
+            if lp.impl == "dense":
+                c["dense"] += 1
+            else:
+                c["sparse"] += 1
+                if lp.kind == "conv_pool":
+                    c["fused"] += 1
+        return c
+
+
+def measure_occupancy(x, block_c: int = 0) -> float:
+    """Mean channel-block occupancy over a batch, measured the way the batched
+    kernel schedules: shared-union channel compaction, then PER-SAMPLE block
+    occupancy on the packed layout (== mean_b cnt_b / n_cb of
+    `batch_block_schedule`). For one image this reduces to the compacted
+    ceil(n_live / bc) / n_cb of DESIGN.md §2.2.
+
+    x: (N,C,H,W) or (C,H,W). Returns the fraction of channel-block work the
+    gathered Pallas schedule does NOT skip.
+    """
+    from repro.kernels.ecr_conv.ops import _pick_block_c
+
+    if x.ndim == 3:
+        x = x[None]
+    n, c, h, w = x.shape
+    bc = block_c or min(_pick_block_c(h, w, c), max(8, c))
+    bc = min(bc, c)
+    n_cb = -(-c // bc)
+    live = jnp.any(x != 0, axis=(2, 3))  # (N, C) per-sample live channels
+    union_order = jnp.argsort(~jnp.any(live, axis=0), stable=True)
+    packed = live[:, union_order]  # one shared permutation, like the kernel
+    packed = jnp.pad(packed, ((0, 0), (0, n_cb * bc - c)))
+    blk_live = packed.reshape(n, n_cb, bc).any(axis=2)  # (N, n_cb)
+    return float(blk_live.mean())
+
+
+def _dense_oracle_step(x, w, last, p):
+    """Reference forward step used only to produce the next calibration input."""
+    x = jnp.maximum(conv2d(_pad1(x), w, 1, "dense"), 0.0)
+    return _maxpool(x, p) if last else x
+
+
+def plan_network(
+    params,
+    calib,
+    ccfg: CNNConfig = CNNConfig(),
+    *,
+    occ_threshold: float = 0.75,
+    block_c: int = 0,
+    use_pallas: bool = True,
+) -> PipelinePlan:
+    """Walk the conv stack on a calibration batch and emit the layer schedule.
+
+    A layer goes sparse when its measured occupancy is <= occ_threshold (the
+    skipped blocks must pay for the compaction gather; at occupancy ~1.0 the
+    sparse path is pure overhead). A stage-final sparse layer is fused with
+    its pooling (PECR); a stage-final dense layer keeps the unfused pool.
+    """
+    if calib.ndim == 3:
+        calib = calib[None]
+    sparse_conv = "ecr_pallas" if use_pallas else "ecr"
+    fused_conv = "pecr_pallas" if use_pallas else "pecr"
+    p = ccfg.pool_size
+    layers = []
+    x = calib
+    idx = 0
+    for s, convs in enumerate(params["stages"]):
+        for i, w in enumerate(convs):
+            last = i == len(convs) - 1
+            occ = measure_occupancy(x, block_c)
+            in_shape = tuple(x.shape[1:])
+            go_sparse = occ <= occ_threshold
+            x = _dense_oracle_step(x, w, last, p)
+            layers.append(
+                LayerPlan(
+                    index=idx,
+                    stage=s,
+                    slot=i,
+                    kind="conv_pool" if last else "conv",
+                    impl=(fused_conv if last else sparse_conv) if go_sparse else "dense",
+                    occupancy=occ,
+                    in_shape=in_shape,
+                    out_shape=tuple(x.shape[1:]),
+                )
+            )
+            idx += 1
+    return PipelinePlan(layers=tuple(layers), occ_threshold=occ_threshold, block_c=block_c)
+
+
+def run_plan(plan: PipelinePlan, params, imgs, ccfg: CNNConfig = CNNConfig()):
+    """Execute the planned layer sequence over a batch: (N,C,H,W) -> logits.
+
+    Each entry is one whole-batch op: the fused Pallas grid for sparse
+    stage-final layers, `conv2d` + ReLU (+ unfused pool) otherwise. Pallas
+    layers run at the plan's `block_c` — the block size the occupancy was
+    measured (and the sparse/dense decision made) at.
+    """
+    from repro.kernels.conv_pool.ops import fused_conv_pool
+    from repro.kernels.ecr_conv.ops import ecr_conv
+
+    if imgs.ndim == 3:
+        imgs = imgs[None]
+    p = ccfg.pool_size
+    x = imgs
+    flat_weights = [w for convs in params["stages"] for w in convs]
+    for lp, w in zip(plan.layers, flat_weights):
+        xp = _pad1(x)
+        if lp.kind == "conv_pool" and lp.impl in ("pecr", "pecr_pallas"):
+            if lp.impl == "pecr_pallas":
+                x = fused_conv_pool(xp, w, 1, p, block_c=plan.block_c)
+            else:
+                x = conv_pool(xp, w, 1, p, None, lp.impl)
+        else:
+            if lp.impl == "ecr_pallas":
+                x = ecr_conv(xp, w, block_c=plan.block_c)
+            else:
+                x = conv2d(xp, w, 1, lp.impl)
+            x = jnp.maximum(x, 0.0)
+            if lp.kind == "conv_pool":
+                x = _maxpool(x, p)
+    x = x.reshape(x.shape[0], -1)
+    x = jnp.maximum(x @ params["fc1"], 0.0)
+    return x @ params["fc2"]

@@ -1,0 +1,95 @@
+"""`hypothesis` if installed, else a deterministic stand-in (same test API).
+
+The property tests in this suite use a small slice of hypothesis's API:
+``given``, ``settings``, and a handful of strategies. `hypothesis` is an
+*optional* dependency (declared as the ``test`` extra in pyproject.toml); on a
+clean interpreter the suite must still collect and run, so this module
+substitutes a deterministic sampler: each strategy draws from a PRNG seeded
+per example index, and ``@given`` replays ``max_examples`` fixed samples.
+No shrinking, no example database — install hypothesis for the real search.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _DataObject:
+        """Stand-in for `st.data()`'s interactive draw object."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.example(self._rng)
+
+    class st:  # noqa: N801 — mirrors `strategies as st`
+        @staticmethod
+        def integers(min_value=0, max_value=2**30):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None):
+            hi = min_size + 10 if max_size is None else max_size
+
+            def draw(rng):
+                n = rng.randint(min_size, hi)
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def data():
+            return _Strategy(_DataObject)
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        # applied above @given, so it annotates given()'s wrapper
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            # NOT functools.wraps: the wrapper must hide fn's signature, or
+            # pytest would resolve the drawn parameters as fixtures
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                for i in range(n):
+                    rng = random.Random(0xEC8 + 7919 * i)
+                    drawn = {k: s.example(rng) for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

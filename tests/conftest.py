@@ -3,6 +3,8 @@ import sys
 
 # tests must see ONE device (the dry-run sets 512 in its own process only)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# make tests/_hypothesis_compat.py importable regardless of pytest import mode
+sys.path.insert(0, os.path.dirname(__file__))
 
 import jax
 

@@ -1,0 +1,169 @@
+"""Batched sparse-CNN pipeline: batched ECR/PECR equivalence, ragged batches,
+batch=1 consistency with the single-image API, and the per-layer planner."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vgg19_sparse import CNNConfig
+from repro.core import conv2d, conv_pool, synth_feature_map
+from repro.kernels.conv_pool.ops import fused_conv_pool
+from repro.kernels.conv_pool.ref import conv_pool_ref
+from repro.kernels.ecr_conv.ops import ecr_conv
+from repro.kernels.ecr_conv.ref import ecr_conv_ref
+from repro.models.cnn import cnn_forward, cnn_forward_batch, init_cnn
+from repro.pipeline import measure_occupancy, plan_network, run_plan
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(n, shape, sparsities, seed=0):
+    """A batch with per-sample (ragged) sparsity."""
+    return jnp.stack(
+        [synth_feature_map(jax.random.PRNGKey(seed + i), shape, s)
+         for i, s in zip(range(n), sparsities)]
+    )
+
+
+# ---------------------------------------------------------------------------
+# batched oracles vs dense, all strides the paper evaluates
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride", [1, 2, 3])
+@pytest.mark.parametrize("impl", ["ecr", "im2col"])
+def test_batched_conv_equivalence(stride, impl):
+    x = _batch(3, (4, 11, 11), [0.0, 0.6, 0.95])
+    k = jax.random.normal(jax.random.PRNGKey(1), (3, 4, 3, 3))
+    ref = conv2d(x, k, stride, "dense")
+    assert ref.shape[0] == 3
+    out = conv2d(x, k, stride, impl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_batched_conv_pool_equivalence():
+    x = _batch(2, (4, 10, 10), [0.3, 0.9])
+    k = jax.random.normal(jax.random.PRNGKey(1), (3, 4, 3, 3))
+    ref = conv_pool(x, k, 1, 2, None, "unfused")
+    out = conv_pool(x, k, 1, 2, None, "pecr")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# batched Pallas kernels: ragged per-sample sparsity in one batch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride", [1, 2, 3])
+def test_batched_ecr_pallas_ragged(stride):
+    # sample 0: a dead channel block; sample 1: dense; sample 2: all zero
+    x = np.zeros((3, 16, 10, 10), np.float32)
+    x[0] = np.asarray(synth_feature_map(jax.random.PRNGKey(0), (16, 10, 10), 0.5))
+    x[0, 4:12] = 0
+    x[1] = np.asarray(synth_feature_map(jax.random.PRNGKey(1), (16, 10, 10), 0.1))
+    x = jnp.asarray(x)
+    k = jax.random.normal(jax.random.PRNGKey(2), (8, 16, 3, 3))
+    y = ecr_conv(x, k, stride=stride, block_c=8, block_o=8)
+    ref = ecr_conv_ref(x, k, stride)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=2e-4, atol=2e-4)
+    # all-zero sample must come out exactly zero (every block skipped)
+    assert np.abs(np.asarray(y[2])).max() == 0.0
+
+
+@pytest.mark.parametrize("pool", [2, 3])
+def test_batched_conv_pool_pallas_ragged(pool):
+    x = np.zeros((2, 16, 11, 11), np.float32)
+    x[0] = np.asarray(synth_feature_map(jax.random.PRNGKey(3), (16, 11, 11), 0.7))
+    x[0, 8:16] = 0
+    x[1] = np.asarray(synth_feature_map(jax.random.PRNGKey(4), (16, 11, 11), 0.2))
+    x = jnp.asarray(x)
+    k = jax.random.normal(jax.random.PRNGKey(5), (8, 16, 3, 3))
+    y = fused_conv_pool(x, k, stride=1, pool=pool, block_c=8, block_o=8)
+    ref = conv_pool_ref(x, k, 1, pool)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# batch=1 equivalence with the single-image API
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fn_pair", ["ecr", "conv_pool"])
+def test_batch_one_matches_single_image(fn_pair):
+    x = synth_feature_map(jax.random.PRNGKey(6), (16, 9, 9), 0.6)
+    k = jax.random.normal(jax.random.PRNGKey(7), (8, 16, 3, 3))
+    if fn_pair == "ecr":
+        single = ecr_conv(x, k, block_c=8, block_o=8)
+        batched = ecr_conv(x[None], k, block_c=8, block_o=8)
+    else:
+        single = fused_conv_pool(x, k, block_c=8, block_o=8)
+        batched = fused_conv_pool(x[None], k, block_c=8, block_o=8)
+    assert batched.shape == (1,) + single.shape
+    np.testing.assert_allclose(np.asarray(batched[0]), np.asarray(single),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# whole-network batch: all impls match per-image results (acceptance)
+# ---------------------------------------------------------------------------
+
+
+_TINY = CNNConfig(name="vgg-tiny", img_size=16, plan=((8, 2), (16, 1)), n_classes=8)
+
+
+@pytest.mark.parametrize("impl", ["dense", "ecr", "pecr", "ecr_pallas", "pecr_pallas"])
+def test_cnn_forward_batch_matches_per_image(impl):
+    params = init_cnn(jax.random.PRNGKey(0), _TINY)
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (3, 3, 16, 16))
+    out = cnn_forward_batch(params, imgs, impl, _TINY)
+    per = jnp.stack([cnn_forward(params, imgs[i], impl, _TINY) for i in range(3)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(per), rtol=1e-4, atol=1e-4)
+    ref = cnn_forward_batch(params, imgs, "dense", _TINY)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# pipeline planner
+# ---------------------------------------------------------------------------
+
+
+def test_measure_occupancy_counts_dead_channels():
+    x = np.array(synth_feature_map(jax.random.PRNGKey(8), (16, 8, 8), 0.2))
+    x[8:16] = 0.0
+    assert measure_occupancy(jnp.asarray(x), block_c=8) == pytest.approx(0.5)
+    assert measure_occupancy(jnp.zeros((2, 16, 8, 8)), block_c=8) == 0.0
+
+
+def test_measure_occupancy_matches_shared_union_schedule():
+    """Disjoint per-sample live sets: the union pack keeps every channel, so
+    the batched kernel skips nothing and the measured occupancy must be 1.0
+    (a per-sample measure would wrongly report 0.5 and mis-plan the layer)."""
+    x = np.zeros((2, 16, 6, 6), np.float32)
+    x[0, 0::2] = 1.0
+    x[1, 1::2] = 1.0
+    assert measure_occupancy(jnp.asarray(x), block_c=8) == 1.0
+
+
+def test_plan_dense_when_occupancy_high():
+    params = init_cnn(jax.random.PRNGKey(0), _TINY)
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (2, 3, 16, 16))
+    plan = plan_network(params, imgs, _TINY, occ_threshold=0.5)
+    assert all(lp.impl == "dense" for lp in plan.layers)  # dense input, live net
+    out = run_plan(plan, params, imgs, _TINY)
+    ref = cnn_forward_batch(params, imgs, "dense", _TINY)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_plan_sparse_layers_still_match_dense():
+    """Force the sparse decision (threshold=1.0 admits every layer) and check
+    the executed mixed plan still reproduces the dense forward."""
+    params = init_cnn(jax.random.PRNGKey(0), _TINY)
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (2, 3, 16, 16))
+    plan = plan_network(params, imgs, _TINY, occ_threshold=1.0)
+    assert any(lp.impl != "dense" for lp in plan.layers)
+    assert plan.layers[-1].kind == "conv_pool" and plan.layers[-1].impl == "pecr_pallas"
+    out = run_plan(plan, params, imgs, _TINY)
+    ref = cnn_forward_batch(params, imgs, "dense", _TINY)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-3, atol=1e-3)
+    counts = plan.counts()
+    assert counts["sparse"] == len(plan.layers) and counts["fused"] == 2
