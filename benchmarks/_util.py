@@ -1,6 +1,9 @@
-"""Benchmark helpers: timing, the paper's layer set, modeled-TPU time."""
+"""Benchmark helpers: timing, the paper's layer set, modeled-TPU time,
+machine-readable result emission (BENCH_<name>.json)."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -24,6 +27,42 @@ def time_fn(f, *args, iters: int = 5, warmup: int = 2) -> float:
         jax.block_until_ready(f(*args))
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts) * 1e6)
+
+
+def write_bench_json(name: str, rows, out_dir: str = ".", extra: dict | None = None) -> str:
+    """Write BENCH_<name>.json — the machine-readable twin of the CSV the
+    benchmark modules print, so the perf trajectory is captured per run.
+
+    rows: list of dicts; each needs at least name/us_per_call (derived and any
+    metric keys ride along verbatim). Returns the written path.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    payload = {"name": name, "schema": "name,us_per_call,derived",
+               "rows": list(rows)}
+    if extra:
+        payload.update(extra)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def parse_csv_rows(text: str):
+    """Parse the `name,us_per_call,derived` CSV rows a benchmark module
+    prints into write_bench_json row dicts (non-conforming lines skipped)."""
+    rows = []
+    for line in text.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) < 2 or parts[0] in ("", "name") or parts[0].startswith("_meta/"):
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        rows.append({"name": parts[0], "us_per_call": us,
+                     "derived": parts[2] if len(parts) > 2 else ""})
+    return rows
 
 
 def modeled_tpu_us(c, h, w, o, kh, kw, stride, occupancy: float, dtype_bytes=2,

@@ -2,15 +2,24 @@
 
 Prints ``name,us_per_call,derived`` CSV rows. Wall times are CPU (this
 container); the paper-metric (MAC reduction) and modeled-TPU columns carry the
-cross-platform story — see EXPERIMENTS.md §Paper-claims."""
+cross-platform story — see EXPERIMENTS.md §Paper-claims.
+
+``--json [DIR]`` additionally writes one machine-readable BENCH_<module>.json
+per module (same rows), so every run appends to the perf trajectory instead
+of scrolling away. The serving benchmark (`serve_vgg19`) always writes its
+own BENCH_serve_vgg19.json and is part of the default set.
+"""
 from __future__ import annotations
 
-import sys
+import argparse
+import contextlib
+import io
 import time
 
 
 def main() -> None:
     from benchmarks import (
+        _util,
         fig2_sparsity,
         fig3_traffic,
         fig9_vgg19,
@@ -19,6 +28,7 @@ def main() -> None:
         fig12_pecr,
         kernels_micro,
         roofline,
+        serve_vgg19,
         table3_single_layer,
     )
 
@@ -32,14 +42,34 @@ def main() -> None:
         ("fig12", fig12_pecr),
         ("kernels", kernels_micro),
         ("roofline", roofline),
+        ("serve", serve_vgg19),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("only", nargs="?", default=None,
+                    help="run a single module (short name, e.g. fig9)")
+    ap.add_argument("--json", nargs="?", const=".", default=None, metavar="DIR",
+                    help="also write BENCH_<module>.json files (default: cwd)")
+    args = ap.parse_args()
+
     print("name,us_per_call,derived")
     for name, mod in modules:
-        if only and name != only:
+        if args.only and name != args.only:
             continue
+        # serve_vgg19 writes its own BENCH json; point it at the same dir
+        kwargs = {"json_dir": args.json} if (args.json and name == "serve") else {}
         t0 = time.time()
-        mod.main()
+        if args.json is None:
+            mod.main(**kwargs)
+        else:
+            buf = io.StringIO()
+            try:
+                with contextlib.redirect_stdout(buf):
+                    mod.main(**kwargs)
+            finally:
+                print(buf.getvalue(), end="")  # keep partial rows on a crash
+            if name != "serve":  # serve_vgg19 already wrote its richer json
+                _util.write_bench_json(name, _util.parse_csv_rows(buf.getvalue()),
+                                       args.json)
         print(f"_meta/{name}_wall_s,{(time.time()-t0)*1e6:.0f},benchmark module wall time")
 
 

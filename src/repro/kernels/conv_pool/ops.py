@@ -61,3 +61,28 @@ def fused_conv_pool(x_chw, kernels_oihw, stride: int = 1, pool: int = 2,
         interpret=interpret,
     )
     return out.transpose(2, 0, 1)[:o]
+
+
+def conv_pool_cost(c: int, h: int, w: int, o: int, kh: int = 3, kw: int = 3, *,
+                   stride: int = 1, pool: int = 2, occupancy: float = 1.0,
+                   batch: int = 1, dtype_bytes: int = 4) -> dict:
+    """Modeled FLOPs / HBM bytes of the fused PECR conv+ReLU+pool at a given
+    channel-block occupancy — the serving autotuner's cost hook for fused
+    stage-final layers.
+
+    Relative to the unfused `ecr_conv_cost` + pool, the fusion (a) divides the
+    output write by pool^2 (only the pooled tile leaves VMEM, DESIGN.md §2.3)
+    and (b) deletes the intermediate conv-result write/read round trip that an
+    unfused pool would pay. The pool max itself adds ~1 op per conv output
+    element on the VPU.
+    """
+    from repro.kernels.ecr_conv.ops import ecr_conv_cost
+
+    base = ecr_conv_cost(c, h, w, o, kh, kw, stride=stride, occupancy=occupancy,
+                         batch=batch, dtype_bytes=dtype_bytes)
+    oh, ow = (h - kh) // stride + 1, (w - kw) // stride + 1
+    conv_out_bytes = o * oh * ow * dtype_bytes * batch
+    pooled_bytes = o * (oh // pool) * (ow // pool) * dtype_bytes * batch
+    return {"flops": base["flops"] + o * oh * ow * batch,  # pool max on the VPU
+            "bytes": base["bytes"] - conv_out_bytes + pooled_bytes,
+            "out_elems": o * (oh // pool) * (ow // pool) * batch}

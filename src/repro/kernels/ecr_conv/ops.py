@@ -82,6 +82,28 @@ def ecr_conv(x_chw, kernels_oihw, stride: int = 1, interpret: bool = True,
     return out.transpose(2, 0, 1)[:o]  # (O, oh, ow)
 
 
+def ecr_conv_cost(c: int, h: int, w: int, o: int, kh: int = 3, kw: int = 3, *,
+                  stride: int = 1, occupancy: float = 1.0, batch: int = 1,
+                  dtype_bytes: int = 4) -> dict:
+    """Modeled FLOPs / HBM bytes of the gathered-schedule ECR conv at a given
+    channel-block occupancy (occupancy=1.0 models the dense path).
+
+    This is the op-level cost hook the serving autotuner falls back to when
+    wall-clock timing is too noisy: the skipped blocks save BOTH the MACs and
+    the activation/weight DMA (the (ids, cnt) schedule never issues them), and
+    the kernel tensor's read amortizes by 1/batch across the batched grid
+    (DESIGN.md §2.4). Spatial dims are the padded input (pass h+2/w+2 for the
+    SAME 3x3 layers). Returns {"flops", "bytes"} totals for the whole batch.
+    """
+    oh, ow = (h - kh) // stride + 1, (w - kw) // stride + 1
+    flops = 2.0 * oh * ow * o * c * kh * kw * occupancy * batch
+    act_bytes = occupancy * c * h * w * dtype_bytes * batch
+    out_bytes = o * oh * ow * dtype_bytes * batch
+    k_bytes = occupancy * o * c * kh * kw * dtype_bytes  # read once per batch
+    return {"flops": flops, "bytes": act_bytes + out_bytes + k_bytes,
+            "out_elems": o * oh * ow * batch}
+
+
 def channel_block_occupancy(x_chw, block_c: int = 128, compact: bool = False) -> float:
     """Fraction of live channel blocks = fraction of MXU/DMA work not skipped.
 

@@ -11,14 +11,18 @@ from repro.pipeline.planner import (
     LayerPlan,
     PipelinePlan,
     measure_occupancy,
+    occupancy_stat,
     plan_network,
     run_plan,
+    validate_plan,
 )
 
 __all__ = [
     "LayerPlan",
     "PipelinePlan",
     "measure_occupancy",
+    "occupancy_stat",
     "plan_network",
     "run_plan",
+    "validate_plan",
 ]

@@ -59,15 +59,19 @@ class PipelinePlan:
         return c
 
 
-def measure_occupancy(x, block_c: int = 0) -> float:
-    """Mean channel-block occupancy over a batch, measured the way the batched
+def occupancy_stat(x, block_c: int = 0, n_valid=None):
+    """Traced (jit-safe) channel-block occupancy, measured the way the batched
     kernel schedules: shared-union channel compaction, then PER-SAMPLE block
     occupancy on the packed layout (== mean_b cnt_b / n_cb of
     `batch_block_schedule`). For one image this reduces to the compacted
     ceil(n_live / bc) / n_cb of DESIGN.md §2.2.
 
-    x: (N,C,H,W) or (C,H,W). Returns the fraction of channel-block work the
-    gathered Pallas schedule does NOT skip.
+    x: (N,C,H,W) or (C,H,W). `n_valid` (optional, traced) restricts the
+    statistic to the first `n_valid` samples — the serving engine measures
+    occupancy over the real requests of a padded bucket, and the all-zero pad
+    samples contribute nothing to the union so the masked measurement equals
+    what the kernel's per-sample schedules do for the real samples. Returns a
+    scalar array (fraction of channel-block work NOT skipped).
     """
     from repro.kernels.ecr_conv.ops import _pick_block_c
 
@@ -78,11 +82,22 @@ def measure_occupancy(x, block_c: int = 0) -> float:
     bc = min(bc, c)
     n_cb = -(-c // bc)
     live = jnp.any(x != 0, axis=(2, 3))  # (N, C) per-sample live channels
+    if n_valid is not None:
+        live = live & (jnp.arange(n) < jnp.asarray(n_valid, jnp.int32))[:, None]
     union_order = jnp.argsort(~jnp.any(live, axis=0), stable=True)
     packed = live[:, union_order]  # one shared permutation, like the kernel
     packed = jnp.pad(packed, ((0, 0), (0, n_cb * bc - c)))
     blk_live = packed.reshape(n, n_cb, bc).any(axis=2)  # (N, n_cb)
-    return float(blk_live.mean())
+    if n_valid is None:
+        return blk_live.mean()
+    nv = jnp.maximum(jnp.asarray(n_valid, jnp.int32), 1)
+    per_sample = blk_live.mean(axis=1)  # (N,)
+    return jnp.where(jnp.arange(n) < nv, per_sample, 0.0).sum() / nv
+
+
+def measure_occupancy(x, block_c: int = 0) -> float:
+    """Concrete-value wrapper of `occupancy_stat` (see its docstring)."""
+    return float(occupancy_stat(x, block_c))
 
 
 def _dense_oracle_step(x, w, last, p):
@@ -138,23 +153,66 @@ def plan_network(
     return PipelinePlan(layers=tuple(layers), occ_threshold=occ_threshold, block_c=block_c)
 
 
-def run_plan(plan: PipelinePlan, params, imgs, ccfg: CNNConfig = CNNConfig()):
+def validate_plan(plan: PipelinePlan, params, imgs) -> None:
+    """Raise a clear ValueError on any plan/params/input mismatch.
+
+    `run_plan` zips the plan with the params' weights and runs whatever the
+    shapes allow — without these checks a wrong-resolution batch or a
+    mismatched network executes silently and returns garbage logits. The
+    serving engine depends on this contract: a plan only ever executes on the
+    (C,H,W) it was calibrated for, against the params it was planned over.
+    """
+    if imgs.ndim not in (3, 4):
+        raise ValueError(f"run_plan expects (C,H,W) or (N,C,H,W) images, got shape {tuple(imgs.shape)}")
+    if not plan.layers:
+        raise ValueError("run_plan got an empty PipelinePlan (no layers)")
+    if plan.block_c < 0:
+        raise ValueError(f"PipelinePlan.block_c must be >= 0 (0 = auto), got {plan.block_c}")
+    in_shape = tuple(imgs.shape[-3:])
+    if in_shape != tuple(plan.layers[0].in_shape):
+        raise ValueError(
+            f"plan was calibrated for input shape {tuple(plan.layers[0].in_shape)}, "
+            f"got images of shape {in_shape}")
+    flat_weights = [w for convs in params["stages"] for w in convs]
+    if len(flat_weights) != len(plan.layers):
+        raise ValueError(
+            f"plan has {len(plan.layers)} conv layers but params carry "
+            f"{len(flat_weights)} conv weights (zip would silently truncate)")
+    for lp, w in zip(plan.layers, flat_weights):
+        if w.shape[1] != lp.in_shape[0]:
+            raise ValueError(
+                f"conv_{lp.index + 1}: plan expects C_in={lp.in_shape[0]}, "
+                f"weight has C_in={w.shape[1]}")
+
+
+def run_plan(plan: PipelinePlan, params, imgs, ccfg: CNNConfig = CNNConfig(), *,
+             collect_occupancy: bool = False, n_valid=None):
     """Execute the planned layer sequence over a batch: (N,C,H,W) -> logits.
 
     Each entry is one whole-batch op: the fused Pallas grid for sparse
     stage-final layers, `conv2d` + ReLU (+ unfused pool) otherwise. Pallas
     layers run at the plan's `block_c` — the block size the occupancy was
     measured (and the sparse/dense decision made) at.
+
+    collect_occupancy=True additionally returns the per-layer observed
+    channel-block occupancy of each layer's INPUT (a (n_layers,) array,
+    jit-traceable) — the signal the serving engine's drift detector consumes.
+    `n_valid` (traced) masks the statistic to the first n_valid samples of a
+    padded serving bucket.
     """
     from repro.kernels.conv_pool.ops import fused_conv_pool
     from repro.kernels.ecr_conv.ops import ecr_conv
 
     if imgs.ndim == 3:
         imgs = imgs[None]
+    validate_plan(plan, params, imgs)
     p = ccfg.pool_size
     x = imgs
+    occs = []
     flat_weights = [w for convs in params["stages"] for w in convs]
     for lp, w in zip(plan.layers, flat_weights):
+        if collect_occupancy:
+            occs.append(occupancy_stat(x, plan.block_c, n_valid))
         xp = _pad1(x)
         if lp.kind == "conv_pool" and lp.impl in ("pecr", "pecr_pallas"):
             if lp.impl == "pecr_pallas":
@@ -171,4 +229,7 @@ def run_plan(plan: PipelinePlan, params, imgs, ccfg: CNNConfig = CNNConfig()):
                 x = _maxpool(x, p)
     x = x.reshape(x.shape[0], -1)
     x = jnp.maximum(x @ params["fc1"], 0.0)
-    return x @ params["fc2"]
+    logits = x @ params["fc2"]
+    if collect_occupancy:
+        return logits, jnp.stack(occs)
+    return logits

@@ -1,0 +1,49 @@
+"""Sparsity-aware serving engine over the pipeline planner (DESIGN.md §4).
+
+Turns the static `PipelinePlan` into a request-serving loop: the
+`MicroBatcher` collects single-image requests into deadline-bounded
+power-of-two buckets, the `PlanCache` compiles one ahead-of-time executable
+per (bucket, block_c, occupancy-signature) key, the `Engine` executes batches
+while tracking per-layer observed occupancy (EMA) and re-plans — optionally
+in the background — when it drifts out of the hysteresis band, and `autotune`
+searches (occ_threshold, block_c) offline, selecting by measured wall time
+with a cost-model fallback for noisy clocks.
+
+Entry points: `launch/serve_cnn.py` (CLI), `benchmarks/serve_vgg19.py`
+(request-rate sweep), `examples/vgg19_server.py` (walkthrough).
+"""
+from repro.serving.autotune import (
+    AutotuneResult,
+    Candidate,
+    autotune,
+    hlo_model_us,
+    plan_model_us,
+)
+from repro.serving.batcher import (
+    MicroBatch,
+    MicroBatcher,
+    Request,
+    SimClock,
+    bucket_sizes,
+)
+from repro.serving.engine import Engine, ServedResult, replay_stream
+from repro.serving.plan_cache import PlanCache, PlanKey, plan_key
+
+__all__ = [
+    "AutotuneResult",
+    "Candidate",
+    "Engine",
+    "MicroBatch",
+    "MicroBatcher",
+    "PlanCache",
+    "PlanKey",
+    "Request",
+    "ServedResult",
+    "SimClock",
+    "autotune",
+    "bucket_sizes",
+    "hlo_model_us",
+    "plan_key",
+    "plan_model_us",
+    "replay_stream",
+]

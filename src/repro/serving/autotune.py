@@ -1,0 +1,200 @@
+"""Offline plan autotuner: search (occ_threshold, block_c) on a calibration
+batch, select by measured wall time, fall back to the cost model when timing
+is too noisy.
+
+The planner's two knobs interact: a bigger `block_c` amortizes schedule
+overhead but rounds n_live up harder (fewer skippable blocks), and the
+profitable `occ_threshold` shifts with both (paper Fig. 9/11: which layers
+should run ECR/PECR is occupancy- and shape-dependent). The autotuner builds
+one `PipelinePlan` per grid point (deduping points that collapse to the same
+schedule), times the jitted whole-batch executor, and picks the fastest.
+
+Timing on a shared machine is noisy; the fallback ranks by the modeled
+roofline time instead: `hlo_cost.analyze` over the lowered executor for
+all-dense plans (where the HLO is a faithful account of the math XLA will
+run), and the kernel-level cost hooks (`ecr_conv_cost` / `conv_pool_cost`)
+when the plan contains Pallas layers — interpret-mode Pallas lowers to an
+emulation whose HLO counts the emulator, not the kernel, so sparse plans are
+modeled at the granularity the kernels actually schedule (skipped blocks save
+their MACs and their DMA).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.configs.vgg19_sparse import CNNConfig
+from repro.pipeline.planner import PipelinePlan, plan_network, run_plan
+from repro.serving.plan_cache import plan_key
+
+# v5e-class roofline constants (same as benchmarks/_util and the dry-run)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+@dataclass
+class Candidate:
+    occ_threshold: float
+    block_c: int
+    plan: PipelinePlan
+    wall_us: float = float("inf")
+    spread: float = 0.0  # (max-min)/median of the timing samples
+    model_us: float = float("inf")
+    timings_us: list = field(default_factory=list)
+
+    def row(self) -> dict:
+        return {"occ_threshold": self.occ_threshold, "block_c": self.block_c,
+                "wall_us": round(self.wall_us, 1), "spread": round(self.spread, 3),
+                "model_us": round(self.model_us, 3),
+                "counts": self.plan.counts()}
+
+
+@dataclass
+class AutotuneResult:
+    best: Candidate
+    candidates: list
+    used_model: bool  # True when the noisy-timing fallback decided the winner
+
+    @property
+    def plan(self) -> PipelinePlan:
+        return self.best.plan
+
+
+def plan_model_us(plan: PipelinePlan, params, ccfg: CNNConfig = CNNConfig(),
+                  batch: int = 1) -> float:
+    """Roofline-modeled execution time (us) of a plan at a given batch size,
+    summed from the kernels' op-level cost hooks plus the classifier GEMMs.
+    Dense layers are the occupancy=1.0 point of the same model, unfused pools
+    pay the intermediate round trip that PECR deletes (DESIGN.md §2.3)."""
+    from repro.kernels.conv_pool.ops import conv_pool_cost
+    from repro.kernels.ecr_conv.ops import ecr_conv_cost
+
+    k = ccfg.kernel_size
+    p = ccfg.pool_size
+    flops = 0.0
+    nbytes = 0.0
+    for lp in plan.layers:
+        c, h, w = lp.in_shape
+        o = lp.out_shape[0]
+        occ = lp.occupancy if lp.impl != "dense" else 1.0
+        fused = lp.kind == "conv_pool" and lp.impl in ("pecr", "pecr_pallas")
+        if fused:
+            cost = conv_pool_cost(c, h + 2, w + 2, o, k, k, pool=p,
+                                  occupancy=occ, batch=batch)
+        else:
+            cost = ecr_conv_cost(c, h + 2, w + 2, o, k, k, occupancy=occ,
+                                 batch=batch)
+            if lp.kind == "conv_pool":  # unfused pool: round trip + pooled write
+                conv_out = cost["out_elems"] * 4.0
+                cost = {"flops": cost["flops"] + cost["out_elems"],
+                        "bytes": cost["bytes"] + conv_out + conv_out / (p * p)}
+        flops += cost["flops"]
+        nbytes += cost["bytes"]
+    # classifier: flatten -> fc1 -> relu -> fc2
+    d_in, d_h = params["fc1"].shape
+    d_out = params["fc2"].shape[1]
+    flops += 2.0 * batch * (d_in * d_h + d_h * d_out)
+    nbytes += 4.0 * (d_in * d_h + d_h * d_out + batch * (d_in + d_h + d_out))
+    return max(flops / PEAK_FLOPS, nbytes / HBM_BW) * 1e6
+
+
+def hlo_model_us(fn, *args) -> float:
+    """Roofline time (us) from `hlo_cost.analyze` over the lowered program —
+    the faithful model for plans with no Pallas (interpret-emulated) layers."""
+    from repro.launch import hlo_cost
+
+    hlo = jax.jit(fn).lower(*args).compile().as_text()
+    a = hlo_cost.analyze(hlo)
+    return max(a["flops"] / PEAK_FLOPS, a["bytes"] / HBM_BW) * 1e6
+
+
+def _time_us(f, *args, iters: int = 3, warmup: int = 1) -> tuple:
+    """(median_us, spread) of a jitted callable; spread=(max-min)/median."""
+    for _ in range(warmup):
+        jax.block_until_ready(f(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    med = float(np.median(ts))
+    return med, float((max(ts) - min(ts)) / max(med, 1e-9)), [float(t) for t in ts]
+
+
+def _model_us(plan: PipelinePlan, params, ccfg, calib, runner) -> float:
+    if any(lp.impl.endswith("_pallas") for lp in plan.layers):
+        return plan_model_us(plan, params, ccfg, batch=calib.shape[0])
+    return hlo_model_us(runner, params, calib)
+
+
+def autotune(params, calib, ccfg: CNNConfig = CNNConfig(), *,
+             thresholds=(0.0, 0.5, 0.75, 0.9), block_cs=(0, 8),
+             iters: int = 3, warmup: int = 1, noise_tol: float = 0.25,
+             use_pallas: bool = True, mode: str = "auto") -> AutotuneResult:
+    """Grid-search (occ_threshold, block_c); return the plan that serves the
+    calibration batch fastest.
+
+    mode="auto" selects by median wall time, unless the timing cannot
+    separate the top two candidates — the winner's spread exceeds `noise_tol`,
+    or the runner-up is within the larger of the two spreads — in which case
+    the ranking falls back to the cost model (see module docstring).
+    mode="time" / mode="model" force one criterion (used by tests and by
+    callers that know their clock quality).
+    """
+    if calib.ndim == 3:
+        calib = calib[None]
+    seen: dict = {}
+    runners: dict = {}
+    cands: list = []
+    for th in thresholds:
+        for bc in block_cs:
+            plan = plan_network(params, calib, ccfg, occ_threshold=th,
+                                block_c=bc, use_pallas=use_pallas)
+            sig = plan_key(calib.shape[0], plan)
+            if sig in seen:  # same schedule == same executable: reuse timing
+                cands.append(Candidate(th, bc, plan, *seen[sig]))
+                continue
+            runners[sig] = _runner_for(plan, ccfg)
+            if mode == "model":  # ranking by model only: skip the timing runs
+                wall, spread, ts = float("inf"), 0.0, []
+            else:
+                wall, spread, ts = _time_us(jax.jit(runners[sig]), params, calib,
+                                            iters=iters, warmup=warmup)
+            seen[sig] = (wall, spread, float("inf"), ts)
+            cands.append(Candidate(th, bc, plan, wall, spread, float("inf"), ts))
+    by_time = sorted(cands, key=lambda c: c.wall_us)
+    # distinct schedules only: dedup aliases share one timing, and comparing
+    # the winner against its own alias would read as margin 0 == "noisy"
+    uniq: dict = {}
+    for c in by_time:
+        uniq.setdefault(plan_key(calib.shape[0], c.plan), c)
+    distinct = list(uniq.values())
+    used_model = mode == "model"
+    if mode == "auto" and len(distinct) > 1:
+        w0, w1 = distinct[0], distinct[1]
+        margin = (w1.wall_us - w0.wall_us) / max(w0.wall_us, 1e-9)
+        used_model = w0.spread > noise_tol or margin < max(w0.spread, w1.spread)
+    elif mode == "auto":
+        used_model = distinct[0].spread > noise_tol
+    if used_model:
+        # model cost is computed lazily, only when it actually decides the
+        # ranking (hlo_model_us recompiles the dense programs to read HLO)
+        model_by_sig: dict = {}
+        for c in cands:
+            sig = plan_key(calib.shape[0], c.plan)
+            if sig not in model_by_sig:
+                model_by_sig[sig] = _model_us(c.plan, params, ccfg, calib,
+                                              runners[sig])
+            c.model_us = model_by_sig[sig]
+    best = min(cands, key=lambda c: c.model_us) if used_model else by_time[0]
+    return AutotuneResult(best=best, candidates=cands, used_model=used_model)
+
+
+def _runner_for(plan: PipelinePlan, ccfg: CNNConfig):
+    def run(params, imgs):
+        return run_plan(plan, params, imgs, ccfg)
+
+    return run

@@ -1,0 +1,334 @@
+"""Occupancy-adaptive serving engine over the static `PipelinePlan`.
+
+`Engine` turns the planner's plan-once artifact into a request-serving loop:
+
+- requests enter through the `MicroBatcher` (deadline-bounded power-of-two
+  buckets); the ragged tail is padded with all-zero images, which the
+  per-sample (ids, cnt) schedules skip at zero MAC cost (DESIGN.md §2.4);
+- each (bucket, plan) pair executes through ONE ahead-of-time compiled
+  program from the `PlanCache` — steady-state serving never compiles;
+- every executed batch also measures the per-layer observed channel-block
+  occupancy of its REAL samples (the traced `occupancy_stat` with an
+  `n_valid` mask) and folds it into an EMA; when the EMA drifts out of the
+  hysteresis band around the occupancies the current plan was calibrated at,
+  the engine re-plans on the most recent real batch — optionally in a
+  background thread — and swaps the new plan in atomically between batches.
+
+Exactness contract: a request's logits are bit-identical to `run_plan` on the
+same image(s) whenever the co-batched samples share a live-channel union (the
+shared-union compaction permutation is then batch-composition-invariant); the
+all-zero pad samples never perturb the union. tests/test_serving.py pins this.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.vgg19_sparse import CNNConfig
+from repro.pipeline.planner import PipelinePlan, plan_network, run_plan
+from repro.serving.batcher import MicroBatch, MicroBatcher, SimClock
+from repro.serving.plan_cache import PlanCache, plan_key
+
+
+@dataclass(frozen=True)
+class ServedResult:
+    """One completed request: logits plus the latency-accounting timestamps."""
+
+    id: int
+    logits: np.ndarray  # (n_classes,)
+    t_arrival: float
+    t_done: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_arrival
+
+
+def _make_runner(plan: PipelinePlan, ccfg: CNNConfig):
+    """The whole-batch executor the cache compiles: logits + per-layer
+    observed occupancy over the first n_valid (real) samples."""
+
+    def run(params, imgs, n_valid):
+        return run_plan(plan, params, imgs, ccfg, collect_occupancy=True,
+                        n_valid=n_valid)
+
+    return run
+
+
+class Engine:
+    """Sparsity-aware serving engine for the planned VGG-style conv stack.
+
+    Drive it with `submit()` + `poll()` (event loop), `drain()` (end of
+    stream), or the synchronous convenience `serve(imgs)`.
+    """
+
+    def __init__(self, params, ccfg: CNNConfig = CNNConfig(), *,
+                 plan: PipelinePlan | None = None, calib=None,
+                 occ_threshold: float = 0.75, block_c: int = 0,
+                 use_pallas: bool = True, max_batch: int = 8,
+                 min_bucket: int = 2, deadline_s: float = 0.010,
+                 clock=time.monotonic,
+                 ema_alpha: float = 0.25, replan_band: float = 0.15,
+                 replan_cooldown: int = 2, replan_async: bool = False,
+                 cache_entries: int = 32):
+        if plan is None:
+            if calib is None:
+                raise ValueError("Engine needs either a prebuilt plan= or calib= images to plan on")
+            plan = plan_network(params, calib, ccfg, occ_threshold=occ_threshold,
+                                block_c=block_c, use_pallas=use_pallas)
+        self.params = params
+        self.ccfg = ccfg
+        self.plan = plan
+        self.use_pallas = use_pallas
+        self.clock = clock
+        self.batcher = MicroBatcher(max_batch=max_batch, deadline_s=deadline_s,
+                                    clock=clock, min_bucket=min_bucket)
+        self.cache = PlanCache(max_entries=cache_entries)
+        self.ema_alpha = ema_alpha
+        self.replan_band = replan_band
+        self.replan_cooldown = replan_cooldown
+        self.replan_async = replan_async
+        self._lock = threading.Lock()
+        self._pending_plan: PipelinePlan | None = None
+        self._replanning = False
+        self._replan_thread: threading.Thread | None = None
+        self._cooldown = 0
+        self._calib_recent = None  # last real (unpadded) executed batch
+        self._occ_ema = np.array([lp.occupancy for lp in plan.layers])
+        self.n_replans = 0
+        self.replan_errors = 0
+        self.n_batches = 0
+        self.n_requests = 0
+        self.n_pad_samples = 0
+        self._fill_sum = 0.0
+
+    # ------------------------------------------------------------------
+    # request loop
+    # ------------------------------------------------------------------
+
+    def submit(self, img, now: float | None = None) -> int:
+        """Queue one (C,H,W) image; returns the request id. `now` overrides
+        the arrival stamp — replay_stream passes the TRUE scheduled arrival,
+        which can precede the clock when execution of a previous batch
+        advanced the simulated timeline past it (the queueing delay behind an
+        executing batch must count against latency and the deadline)."""
+        self.n_requests += 1
+        return self.batcher.submit(jnp.asarray(img, jnp.float32), now=now)
+
+    def next_deadline(self) -> float | None:
+        """Absolute time the driver must poll by (batcher deadline contract)."""
+        return self.batcher.next_deadline()
+
+    def poll(self) -> list:
+        """Adopt any finished re-plan, then run at most one due batch.
+        Returns the completed `ServedResult`s ([] when nothing was due)."""
+        self._adopt_pending_plan()
+        batch = self.batcher.ready()
+        if batch is None:
+            return []
+        return self._run_batch(batch)
+
+    def drain(self) -> list:
+        """Flush and run everything still queued (end of stream)."""
+        out = []
+        while self.batcher.pending():
+            self._adopt_pending_plan()
+            batch = self.batcher.flush()
+            out.extend(self._run_batch(batch))
+        self._adopt_pending_plan()  # a re-plan the last batch triggered
+        return out
+
+    def serve(self, imgs) -> np.ndarray:
+        """Synchronous convenience: submit every (C,H,W) image in `imgs`,
+        drain, and return (N, n_classes) logits in submission order."""
+        ids = [self.submit(img) for img in imgs]
+        results = {r.id: r for r in self.drain()}
+        return np.stack([results[i].logits for i in ids])
+
+    def warmup(self, buckets=None) -> int:
+        """Pre-compile the current plan at the given bucket sizes (default:
+        all of them) so the serving path never compiles inline. Returns the
+        number of fresh compilations triggered."""
+        before = self.cache.compiles
+        for b in buckets or self.batcher.exec_buckets():
+            self._executable(int(b))
+        return self.cache.compiles - before
+
+    def stats(self) -> dict:
+        c = self.plan.counts()
+        return {
+            **self.cache.stats(),
+            "requests": self.n_requests,
+            "batches": self.n_batches,
+            "pad_samples": self.n_pad_samples,
+            "mean_fill": self._fill_sum / max(self.n_batches, 1),
+            "replans": self.n_replans,
+            "replan_errors": self.replan_errors,
+            "plan_sparse": c["sparse"],
+            "plan_dense": c["dense"],
+            "occ_ema": [float(v) for v in np.round(self._occ_ema, 4)],
+        }
+
+    # ------------------------------------------------------------------
+    # execution
+    # ------------------------------------------------------------------
+
+    def _executable(self, bucket: int):
+        key = plan_key(bucket, self.plan)
+        plan, ccfg, params = self.plan, self.ccfg, self.params
+
+        def build():
+            c, h, w = plan.layers[0].in_shape
+            imgs_s = jax.ShapeDtypeStruct((bucket, c, h, w), jnp.float32)
+            nv_s = jax.ShapeDtypeStruct((), jnp.int32)
+            return jax.jit(_make_runner(plan, ccfg)).lower(params, imgs_s, nv_s).compile()
+
+        return self.cache.get_or_compile(key, plan, build)
+
+    def _run_batch(self, batch: MicroBatch) -> list:
+        imgs = jnp.stack([r.img for r in batch.requests])
+        if batch.bucket > batch.n_real:  # ragged tail: all-zero pad samples
+            pad = jnp.zeros((batch.bucket - batch.n_real,) + imgs.shape[1:], imgs.dtype)
+            imgs = jnp.concatenate([imgs, pad])
+        exe = self._executable(batch.bucket)
+        t0 = time.perf_counter()
+        logits, occs = exe(self.params, imgs, jnp.asarray(batch.n_real, jnp.int32))
+        jax.block_until_ready(logits)
+        wall = time.perf_counter() - t0
+        if isinstance(self.clock, SimClock):
+            self.clock.advance(wall)  # charge real service time to the sim timeline
+        t_done = self.clock()
+        logits = np.asarray(logits)
+        self.n_batches += 1
+        self.n_pad_samples += batch.bucket - batch.n_real
+        self._fill_sum += batch.fill
+        self._calib_recent = imgs[: batch.n_real]
+        results = [ServedResult(id=r.id, logits=logits[i], t_arrival=r.t_arrival,
+                                t_done=t_done)
+                   for i, r in enumerate(batch.requests)]
+        self._observe(np.asarray(occs))  # after results exist: a re-plan
+        return results                   # failure must not drop served work
+
+    # ------------------------------------------------------------------
+    # occupancy drift -> background re-plan
+    # ------------------------------------------------------------------
+
+    def _observe(self, occs: np.ndarray) -> None:
+        a = self.ema_alpha
+        self._occ_ema = (1.0 - a) * self._occ_ema + a * occs
+        if self._cooldown > 0:
+            self._cooldown -= 1
+            return
+        if self._replanning:
+            return
+        planned = np.array([lp.occupancy for lp in self.plan.layers])
+        if float(np.abs(self._occ_ema - planned).max()) > self.replan_band:
+            self._launch_replan()
+
+    def _launch_replan(self) -> None:
+        calib = self._calib_recent
+        if calib is None:
+            return
+        self._replanning = True
+        plan = self.plan
+
+        def work():
+            try:
+                new = plan_network(self.params, calib, self.ccfg,
+                                   occ_threshold=plan.occ_threshold,
+                                   block_c=plan.block_c, use_pallas=self.use_pallas)
+            except Exception:
+                # a failed re-plan must neither wedge the drift detector nor
+                # take down the serving loop — keep the current plan, count
+                # the failure (stats()["replan_errors"]), and retry on the
+                # next drift trigger
+                with self._lock:
+                    self._replanning = False
+                    self.replan_errors += 1
+                return
+            with self._lock:
+                self._pending_plan = new
+
+        if self.replan_async:
+            self._replan_thread = threading.Thread(target=work, daemon=True)
+            self._replan_thread.start()
+        else:
+            work()
+
+    def _adopt_pending_plan(self) -> None:
+        """Atomic swap point: a finished re-plan replaces the live plan only
+        BETWEEN batches (never mid-execution). Resetting the EMA reference to
+        the new plan's calibrated occupancies closes the hysteresis loop —
+        drift inside the band never re-plans, and a swap re-centers the band."""
+        with self._lock:
+            if self._pending_plan is None:
+                return
+            new, self._pending_plan = self._pending_plan, None
+        self._replanning = False
+        if plan_key(0, new) != plan_key(0, self.plan):
+            self.n_replans += 1  # schedule changed; same-key swaps only re-center
+        self.plan = new
+        self._occ_ema = np.array([lp.occupancy for lp in new.layers])
+        self._cooldown = self.replan_cooldown
+
+    def join_replan(self, timeout: float | None = 10.0) -> None:
+        """Test/shutdown helper: wait for an in-flight background re-plan."""
+        t = self._replan_thread
+        if t is not None:
+            t.join(timeout)
+
+
+def replay_stream(engine: Engine, imgs, rate_rps: float,
+                  arrivals=None) -> list:
+    """Drive the engine's event loop over a deterministic open-loop request
+    stream on a `SimClock`: images arrive at `rate_rps` (or at the explicit
+    `arrivals` timestamps), the clock jumps to the next event (arrival or
+    batcher deadline), and measured execution wall time is charged into the
+    simulated timeline by the engine. Returns all `ServedResult`s.
+
+    This is the shared driver of the serving benchmark, the CLI, and the
+    deadline tests — the engine's clock must be a SimClock.
+    """
+    clock = engine.clock
+    if not isinstance(clock, SimClock):
+        raise ValueError("replay_stream needs an Engine built on a SimClock")
+    if arrivals is None:
+        t0 = clock()
+        arrivals = [t0 + i / rate_rps for i in range(len(imgs))]
+    results = []
+    i = 0
+    n = len(imgs)
+
+    def submit_due():
+        """Enqueue EVERY arrival at or before the current sim time: when
+        execution advanced the clock past several scheduled arrivals, the
+        whole backlog must be queued before the next poll so it coalesces
+        into full buckets (a one-at-a-time submit would serve overload as
+        singleton batches and misreport fill/throughput)."""
+        nonlocal i
+        while i < n and arrivals[i] <= clock():
+            engine.submit(imgs[i], now=arrivals[i])
+            i += 1
+
+    while len(results) < n:
+        submit_due()
+        while True:
+            out = engine.poll()
+            if not out:
+                break
+            results.extend(out)
+            submit_due()  # execution moved the clock: pick up new backlog
+        if len(results) >= n:
+            break
+        t_arr = arrivals[i] if i < n else None
+        t_dl = engine.next_deadline()
+        if t_arr is not None and (t_dl is None or t_arr <= t_dl):
+            clock.set(t_arr)
+        elif t_dl is not None:
+            clock.set(t_dl)
+    return results

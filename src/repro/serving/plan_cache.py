@@ -1,0 +1,80 @@
+"""Plan/compile cache: one AOT-compiled executable per (bucket, plan) key.
+
+Serving cannot afford a recompile per request: the whole point of bucketed
+batching is that the set of distinct programs is small and each compiles
+exactly once. The cache key is
+
+    (batch bucket, block_c, occupancy signature)
+
+where the occupancy signature is the tuple of per-layer impl decisions
+("dense" / "ecr_pallas" / "pecr_pallas" / ...). This IS the occupancy bucket
+that matters for compilation: the measured occupancies only reach the
+compiled program through which side of `occ_threshold` each layer fell, so
+quantizing occupancy to the decision boundary is the coarsest bucketing that
+still maps every distinct executable to its own key — two re-plans whose
+measured occupancies drifted but whose schedules agree share one compiled
+program (cache hit, no recompile).
+
+Compilation is ahead-of-time (`jax.jit(...).lower(...).compile()`), so a miss
+pays its full cost at `get_or_compile` time and `compiles` counts real XLA
+compilations — the serving tests assert compiles == number of distinct keys.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class PlanKey:
+    bucket: int  # padded batch size the executable was compiled for
+    block_c: int  # the plan's channel-block size (0 = per-layer auto)
+    occ_sig: tuple  # per-layer impl decisions — the plan's occupancy bucket
+
+
+def plan_key(bucket: int, plan) -> PlanKey:
+    """The cache key of executing `plan` at batch size `bucket`."""
+    return PlanKey(bucket=int(bucket), block_c=int(plan.block_c),
+                   occ_sig=tuple(lp.impl for lp in plan.layers))
+
+
+class PlanCache:
+    """LRU cache of compiled executables, with hit/miss/compile counters."""
+
+    def __init__(self, max_entries: int = 32):
+        self.max_entries = max_entries
+        self._entries: OrderedDict = OrderedDict()  # PlanKey -> (exe, plan)
+        self.compiles = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: PlanKey) -> bool:
+        return key in self._entries
+
+    def get_or_compile(self, key: PlanKey, plan, build):
+        """Return the executable for `key`, compiling via `build()` on a miss.
+
+        `build` must return the AOT-compiled executable (it is only called on
+        a miss, and exactly once per distinct key while the entry is resident).
+        """
+        if key in self._entries:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return self._entries[key][0]
+        self.misses += 1
+        exe = build()
+        self.compiles += 1
+        self._entries[key] = (exe, plan)
+        if len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return exe
+
+    def stats(self) -> dict:
+        return {"entries": len(self._entries), "compiles": self.compiles,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}

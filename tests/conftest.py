@@ -5,6 +5,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # make tests/_hypothesis_compat.py importable regardless of pytest import mode
 sys.path.insert(0, os.path.dirname(__file__))
+# repo root: the benchmark harness (`import benchmarks`) is under test too
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax
 
