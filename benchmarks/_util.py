@@ -29,9 +29,26 @@ def time_fn(f, *args, iters: int = 5, warmup: int = 2) -> float:
     return float(np.median(ts) * 1e6)
 
 
+def git_sha() -> str:
+    """Current repo HEAD (short), "unknown" outside a git checkout — stamped
+    into every BENCH_*.json so the perf trajectory is attributable."""
+    import subprocess
+
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=5,
+                             cwd=os.path.dirname(os.path.abspath(__file__)))
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
 def write_bench_json(name: str, rows, out_dir: str = ".", extra: dict | None = None) -> str:
     """Write BENCH_<name>.json — the machine-readable twin of the CSV the
     benchmark modules print, so the perf trajectory is captured per run.
+    Every payload is stamped with the git SHA and a UTC timestamp, so a
+    BENCH artifact is attributable to the commit that produced it.
 
     rows: list of dicts; each needs at least name/us_per_call (derived and any
     metric keys ride along verbatim). Returns the written path.
@@ -39,6 +56,8 @@ def write_bench_json(name: str, rows, out_dir: str = ".", extra: dict | None = N
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{name}.json")
     payload = {"name": name, "schema": "name,us_per_call,derived",
+               "git_sha": git_sha(),
+               "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
                "rows": list(rows)}
     if extra:
         payload.update(extra)

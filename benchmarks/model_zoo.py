@@ -1,0 +1,91 @@
+"""Model-zoo smoke: every LayerGraph network end-to-end through the planned
+pipeline (plan_network -> run_plan), reduced shapes at CPU/CI budget.
+
+One row per (network, occ_threshold in {1.0 sparse-forced, 0.0 all-dense}):
+wall time of the jitted planned executor over a small batch, the plan's
+dense/sparse/fused layer counts, and the max logits deviation of the sparse
+plan from the all-dense reference — the acceptance number that says the
+sparse path is numerically sound on THIS topology (LeNet's 5x5/pad-0 fused
+stacks, AlexNet's strided conv + overlapping ceil-mode pools, VGG's SAME
+stacks). This is the CI job that keeps LeNet/AlexNet online as first-class
+scenarios, not just VGG.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._util import time_fn, write_bench_json
+from repro.pipeline import plan_network, run_plan
+
+
+def _zoo(reduced: bool = True):
+    from repro.configs.alexnet import ALEXNET, ALEXNET_REDUCED
+    from repro.configs.lenet import LENET, LENET_REDUCED
+    from repro.configs.vgg19_sparse import CNN_REDUCED, CNNConfig, vgg19_graph
+
+    if reduced:
+        return (LENET_REDUCED, ALEXNET_REDUCED, vgg19_graph(CNN_REDUCED))
+    return (LENET, ALEXNET, vgg19_graph(CNNConfig()))
+
+
+def _calib(graph, n: int, seed: int = 0, dead_frac: float = 0.5):
+    """Batch with a shared dead trailing-channel band (post-ReLU channel
+    death the planner exploits); the first conv's input may be fully dense
+    (3-channel images) — deeper layers still go sparse from the net's own
+    ReLU."""
+    from repro.core import dead_channel_band
+
+    c, h, w = graph.in_shape
+    return dead_channel_band(
+        jax.random.uniform(jax.random.PRNGKey(seed), (n, c, h, w)), dead_frac)
+
+
+def rows(reduced: bool = True, batch: int = 2):
+    out = []
+    for graph in _zoo(reduced):
+        from repro.graph import init_graph
+
+        params = init_graph(jax.random.PRNGKey(0), graph)
+        calib = _calib(graph, batch)
+        dense_plan = plan_network(params, calib, graph, occ_threshold=0.0,
+                                  block_c=8)
+        sparse_plan = plan_network(params, calib, graph, occ_threshold=1.0,
+                                   block_c=8)
+        ref = run_plan(dense_plan, params, calib)
+        got = run_plan(sparse_plan, params, calib)
+        dev = float(jnp.abs(got - ref).max())
+        for tag, plan in (("dense", dense_plan), ("sparse", sparse_plan)):
+            t = time_fn(jax.jit(lambda p, x, pl=plan: run_plan(pl, p, x)),
+                        params, calib, iters=2, warmup=1)
+            c = plan.counts()
+            out.append({
+                "name": f"zoo/{graph.name}/{tag}",
+                "us_per_call": t,
+                "derived": (f"batch={batch} layers={len(plan.layers)} "
+                            f"dense={c['dense']} sparse={c['sparse']} "
+                            f"fused={c['fused']} max_dev_vs_dense={dev:.2e}"),
+            })
+    return out
+
+
+def main(reduced: bool = True, batch: int = 2, json_dir: str | None = None):
+    rs = rows(reduced=reduced, batch=batch)
+    for r in rs:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    if json_dir:
+        return write_bench_json("model_zoo", rs, json_dir)
+    return None
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size graphs (slow; default is reduced/CI scale)")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--json", nargs="?", const=".", default=None, metavar="DIR",
+                    help="also write BENCH_model_zoo.json (default dir: cwd)")
+    args = ap.parse_args()
+    main(reduced=not args.full, batch=args.batch, json_dir=args.json)

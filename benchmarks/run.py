@@ -5,9 +5,13 @@ container); the paper-metric (MAC reduction) and modeled-TPU columns carry the
 cross-platform story — see EXPERIMENTS.md §Paper-claims.
 
 ``--json [DIR]`` additionally writes one machine-readable BENCH_<module>.json
-per module (same rows), so every run appends to the perf trajectory instead
-of scrolling away. The serving benchmark (`serve_vgg19`) always writes its
-own BENCH_serve_vgg19.json and is part of the default set.
+per module (same rows), each stamped with the producing git SHA + UTC
+timestamp (see `_util.write_bench_json`), so every run appends an
+attributable point to the perf trajectory instead of scrolling away. The
+serving benchmark (`serve_vgg19`) always writes its own
+BENCH_serve_vgg19.json and is part of the default set; the model-zoo smoke
+(`model_zoo`) runs the reduced LeNet/AlexNet/VGG graphs through the planned
+pipeline.
 """
 from __future__ import annotations
 
@@ -27,6 +31,7 @@ def main() -> None:
         fig11_theta,
         fig12_pecr,
         kernels_micro,
+        model_zoo,
         roofline,
         serve_vgg19,
         table3_single_layer,
@@ -42,6 +47,7 @@ def main() -> None:
         ("fig12", fig12_pecr),
         ("kernels", kernels_micro),
         ("roofline", roofline),
+        ("zoo", model_zoo),
         ("serve", serve_vgg19),
     ]
     ap = argparse.ArgumentParser(description=__doc__)

@@ -9,20 +9,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.serve_cnn import serving_config, synth_requests
-from repro.models.cnn import init_cnn, shift_dead_channels
+from repro.graph import init_graph
+from repro.launch.serve_cnn import serving_graph, synth_requests
+from repro.models.cnn import shift_dead_channels
 from repro.pipeline import run_plan
 from repro.serving import Engine, SimClock, autotune, replay_stream
 
 # the CLI's reduced net: full VGG-19 is overkill for a walkthrough; trained-
 # like nets arrive with whole dead channels (paper Fig. 2), which is the
 # structure the engine's plan skips — synth_requests bakes that band in
-ccfg = serving_config(full=False)
-params = shift_dead_channels(init_cnn(jax.random.PRNGKey(0), ccfg))
+graph = serving_graph("vgg19", full=False)
+params = shift_dead_channels(init_graph(jax.random.PRNGKey(0), graph))
 
 print("1) offline autotune: search (occ_threshold, block_c) on a calibration batch")
-calib = jnp.stack(synth_requests(ccfg, 2, seed=1))
-tuned = autotune(params, calib, ccfg, thresholds=(0.5, 0.9), block_cs=(8,), iters=2)
+calib = jnp.stack(synth_requests(graph, 2, seed=1))
+tuned = autotune(params, calib, graph, thresholds=(0.5, 0.9), block_cs=(8,), iters=2)
 for c in tuned.candidates:
     print(f"   th={c.occ_threshold:.2f} bc={c.block_c} wall={c.wall_us:8.1f}us "
           f"model={c.model_us:8.3f}us counts={c.plan.counts()}")
@@ -31,13 +32,13 @@ print(f"   picked th={tuned.best.occ_threshold} bc={tuned.best.block_c} "
 
 print("\n2) engine: deadline-bounded micro-batching on a simulated clock")
 clock = SimClock()
-engine = Engine(params, ccfg, plan=tuned.plan, max_batch=4, deadline_s=0.005,
+engine = Engine(params, graph=graph, plan=tuned.plan, max_batch=4, deadline_s=0.005,
                 clock=clock)
 print(f"   plan: {[f'conv{lp.index+1}:{lp.impl}' for lp in engine.plan.layers]}")
 print(f"   buckets={engine.batcher.exec_buckets()}, warmup compiled "
       f"{engine.warmup()} programs")
 
-imgs = synth_requests(ccfg, 7, seed=100)
+imgs = synth_requests(graph, 7, seed=100)
 results = replay_stream(engine, imgs, rate_rps=400.0)
 lat = sorted(r.latency_s * 1e3 for r in results)
 stats = engine.stats()
@@ -49,11 +50,11 @@ print(f"   cache: {stats['compiles']} compiles, {stats['hits']} hits "
 print("\n3) exactness: engine logits == offline run_plan, bit-for-bit")
 by_id = {r.id: r.logits for r in results}
 served = np.stack([by_id[i] for i in sorted(by_id)])
-ref = np.asarray(run_plan(engine.plan, params, jnp.stack(imgs), ccfg))
+ref = np.asarray(run_plan(engine.plan, params, jnp.stack(imgs)))
 print(f"   fp32-exact: {np.array_equal(served, ref)}")
 
 print("\n4) occupancy drift: dense traffic arrives -> engine re-plans")
-dense_imgs = synth_requests(ccfg, 12, seed=200, dead_frac=0.0)
+dense_imgs = synth_requests(graph, 12, seed=200, dead_frac=0.0)
 engine.serve(dense_imgs)
 stats = engine.stats()
 print(f"   after dense traffic: replans={stats['replans']}, plan now "

@@ -1,0 +1,62 @@
+"""alexnet [cnn] — AlexNet on the LayerGraph IR (paper Table III rows 2-3).
+
+The standard single-tower AlexNet: 11x11/4 then 5x5 then three 3x3 convs,
+ReLU after each, with the OVERLAPPING 3x3/2 max-pools of the original. Those
+pools are exactly what the VGG-only spine could not express — pooling stride
+!= pool size makes them ineligible for the PECR fusion rule
+(`repro.graph.registry.fusion_eligible`), so a sparse plan runs the
+stage-final convs as ECR + an unfused overlapping pool, and the 11x11/stride-4
+first conv exercises the kernel's large-k / strided paths.
+
+The paper extracts Conv3/Conv4 at 0.90 input sparsity (Table III);
+`benchmarks/table3_single_layer.py` pulls those layers from this graph.
+
+`ALEXNET_REDUCED` is the CI-scale variant; its 3x2/2 pools land on maps the
+overlapping windows do not tile, so they run in "ceil" mode — the explicit
+partial-tail handling the old `_maxpool` silently truncated away.
+"""
+from __future__ import annotations
+
+from repro.graph.ir import ConvSpec, DenseSpec, Flatten, LayerGraph, PoolSpec, ReLU
+
+# published input sparsity of the extracted layers (paper Table III)
+TABLE3_SPARSITY = {"conv3": 0.90, "conv4": 0.90}
+
+
+def alexnet_graph(*, img_size: int = 224, in_channels: int = 3,
+                  n_classes: int = 1000, name: str = "alexnet") -> LayerGraph:
+    pool = PoolSpec(3, stride=2)  # overlapping; 55/27/13 all tile exactly
+    nodes = (
+        ConvSpec(64, k=11, stride=4, pad=2), ReLU(), pool,
+        ConvSpec(192, k=5, stride=1, pad=2), ReLU(), pool,
+        ConvSpec(384, k=3, stride=1, pad=1), ReLU(),
+        ConvSpec(256, k=3, stride=1, pad=1), ReLU(),
+        ConvSpec(256, k=3, stride=1, pad=1), ReLU(), pool,
+        Flatten(),
+        DenseSpec(4096, relu=True), DenseSpec(4096, relu=True),
+        DenseSpec(n_classes),
+    )
+    return LayerGraph(name=name, in_shape=(in_channels, img_size, img_size),
+                      nodes=nodes)
+
+
+def alexnet_reduced_graph(*, img_size: int = 32, in_channels: int = 3,
+                          n_classes: int = 10,
+                          name: str = "alexnet-tiny") -> LayerGraph:
+    pool = PoolSpec(3, stride=2, mode="ceil")  # partial tails kept, not dropped
+    nodes = (
+        ConvSpec(16, k=5, stride=2, pad=2), ReLU(), pool,
+        ConvSpec(24, k=5, stride=1, pad=2), ReLU(), pool,
+        ConvSpec(32, k=3, stride=1, pad=1), ReLU(),
+        ConvSpec(32, k=3, stride=1, pad=1), ReLU(),
+        ConvSpec(24, k=3, stride=1, pad=1), ReLU(), pool,
+        Flatten(),
+        DenseSpec(64, relu=True),
+        DenseSpec(n_classes),
+    )
+    return LayerGraph(name=name, in_shape=(in_channels, img_size, img_size),
+                      nodes=nodes)
+
+
+ALEXNET = alexnet_graph()
+ALEXNET_REDUCED = alexnet_reduced_graph()

@@ -1,0 +1,42 @@
+"""lenet [cnn] — LeNet-5 on the LayerGraph IR (paper Table III's first row).
+
+The classic 32x32 LeNet-5: two 5x5 VALID convs (6 then 16 filters), each
+followed by ReLU and a 2x2/2 max-pool, then the 120/84/10 dense head. The
+paper extracts Conv2 at 0.95 input sparsity and reports ECR beating cuDNN on
+it — the layer `benchmarks/table3_single_layer.py` now pulls from THIS graph
+instead of a synthetic one-off.
+
+Both pools are fusion-eligible (stride == p, exact tiling: 28 -> 14, 10 -> 5),
+so a sparse plan runs the whole body as PECR — the shapes here are the ones
+that exercise the 5x5-kernel / pad-0 paths the VGG-only spine never hit.
+
+`LENET_REDUCED` is the CI-scale variant (16x16 input, fewer filters) the
+model-zoo smoke benchmark and the serving tests run end-to-end.
+"""
+from __future__ import annotations
+
+from repro.graph.ir import ConvSpec, DenseSpec, Flatten, LayerGraph, PoolSpec, ReLU
+
+# published input sparsity of each conv (paper Table III; Conv1 sees the
+# dense image, Conv2 the 0.95-sparse post-ReLU/pool map)
+TABLE3_SPARSITY = {"conv2": 0.95}
+
+
+def lenet_graph(*, img_size: int = 32, in_channels: int = 1,
+                filters: tuple = (6, 16), k: int = 5,
+                head: tuple = (120, 84), n_classes: int = 10,
+                name: str = "lenet5") -> LayerGraph:
+    nodes = []
+    for c_out in filters:
+        nodes += [ConvSpec(c_out, k=k, stride=1, pad=0), ReLU(), PoolSpec(2)]
+    nodes.append(Flatten())
+    for d in head:
+        nodes.append(DenseSpec(d, relu=True))
+    nodes.append(DenseSpec(n_classes))
+    return LayerGraph(name=name, in_shape=(in_channels, img_size, img_size),
+                      nodes=tuple(nodes))
+
+
+LENET = lenet_graph()
+LENET_REDUCED = lenet_graph(img_size=16, filters=(4, 8), head=(32,),
+                            n_classes=8, name="lenet-tiny")

@@ -3,10 +3,13 @@ conv+pool stacks runnable through the dense, ECR-sparse, and PECR-fused paths.
 
 This is the 11th ("paper's own") architecture; it is not part of the 40 LM
 dry-run cells but has its own configs, smoke tests and benchmarks (Figs 9-12).
+`vgg19_graph` lowers a `CNNConfig` onto the LayerGraph IR — VGG-19 is one
+graph constructor among several (see `repro.configs.lenet` / `.alexnet`).
 """
 from dataclasses import dataclass, field
 
 from repro.configs.base import ModelConfig, register
+from repro.graph.ir import ConvSpec, DenseSpec, Flatten, LayerGraph, PoolSpec, ReLU
 
 # VGG-19 conv plan: (out_channels, n_convs) per stage; 2x2 maxpool after each.
 VGG19_PLAN = ((64, 2), (128, 2), (256, 4), (512, 4), (512, 4))
@@ -52,3 +55,21 @@ register(FULL, REDUCED)
 
 CNN_FULL = CNNConfig()
 CNN_REDUCED = CNNConfig(name="vgg-tiny", img_size=32, plan=((8, 1), (16, 1)), n_classes=16)
+
+
+def vgg19_graph(ccfg: CNNConfig = CNNConfig()) -> LayerGraph:
+    """Lower a VGG-style `CNNConfig` onto the LayerGraph IR: per stage,
+    `n_convs` SAME convs (k x k, stride 1, pad k//2) each followed by ReLU,
+    a stage-final non-overlapping pool, then the 2-layer dense head. Pool
+    mode is "valid": every VGG resolution divides exactly, and anything that
+    doesn't should fail loudly rather than silently truncate."""
+    nodes = []
+    k = ccfg.kernel_size
+    for c_out, n_convs in ccfg.plan:
+        for _ in range(n_convs):
+            nodes += [ConvSpec(c_out, k=k, stride=1, pad=k // 2), ReLU()]
+        nodes.append(PoolSpec(ccfg.pool_size))
+    nodes += [Flatten(), DenseSpec(512, relu=True), DenseSpec(ccfg.n_classes)]
+    return LayerGraph(name=ccfg.name,
+                      in_shape=(ccfg.in_channels, ccfg.img_size, ccfg.img_size),
+                      nodes=tuple(nodes))

@@ -17,7 +17,13 @@ from repro.core.ecr import (
     ecr_spmv,
 )
 from repro.core.pecr import PECR, conv_pool, conv_pool_pecr, conv_pool_unfused, pecr_compress, pecr_conv_pool
-from repro.core.sparsity import block_occupancy, compact_block_ids, synth_feature_map, window_stats
+from repro.core.sparsity import (
+    block_occupancy,
+    compact_block_ids,
+    dead_channel_band,
+    synth_feature_map,
+    window_stats,
+)
 
 __all__ = [
     "ECR",
@@ -37,6 +43,7 @@ __all__ = [
     "ecr_spmv",
     "pecr_compress",
     "pecr_conv_pool",
+    "dead_channel_band",
     "synth_feature_map",
     "window_stats",
 ]

@@ -203,14 +203,8 @@ def conv2d_im2col(x: jax.Array, kernels: jax.Array, stride: int = 1) -> jax.Arra
 
 
 def conv2d(x, kernels, stride: int = 1, impl: str = "dense") -> jax.Array:
-    if impl == "dense":
-        return conv2d_dense(x, kernels, stride)
-    if impl == "im2col":
-        return conv2d_im2col(x, kernels, stride)
-    if impl == "ecr":
-        return conv2d_ecr(x, kernels, stride)
-    if impl == "ecr_pallas":
-        from repro.kernels.ecr_conv.ops import ecr_conv
+    """Multi-impl conv entry point; dispatch lives in the op registry
+    (`repro.graph.registry`), not in a local if/elif chain."""
+    from repro.graph.registry import get_op
 
-        return ecr_conv(x, kernels, stride)
-    raise ValueError(f"unknown conv impl {impl!r}")
+    return get_op("conv", impl).forward(x, kernels, stride=stride)

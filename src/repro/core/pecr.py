@@ -137,15 +137,13 @@ def conv_pool_unfused(x, kernels, c_s: int = 1, p: int = 2, p_s: int | None = No
 
 
 def conv_pool(x, kernels, c_s=1, p=2, p_s=None, impl="unfused"):
-    if impl == "unfused":
-        return conv_pool_unfused(x, kernels, c_s, p, p_s)
-    if impl == "pecr":
-        return conv_pool_pecr(x, kernels, c_s, p, p_s)
-    if impl == "pecr_pallas":
-        from repro.kernels.conv_pool.ops import fused_conv_pool
+    """Multi-impl fused/unfused conv+ReLU+pool entry point; dispatch lives in
+    the op registry (`repro.graph.registry`), not in a local if/elif chain."""
+    from repro.graph.ir import PoolSpec
+    from repro.graph.registry import get_op
 
-        return fused_conv_pool(x, kernels, c_s, p, p_s)
-    raise ValueError(f"unknown conv_pool impl {impl!r}")
+    pool = PoolSpec(p, stride=0 if p_s is None else p_s, mode="floor")
+    return get_op("conv_pool", impl).forward(x, kernels, stride=c_s, pool=pool)
 
 
 # ---------------------------------------------------------------------------

@@ -146,6 +146,22 @@ def occupancy_fraction(occ: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+def dead_channel_band(x, frac: float):
+    """Zero the TRAILING `int(C * frac)` channels of a (C,H,W) / (N,C,H,W)
+    feature map — the deterministic shared dead-channel band the serving
+    stack calibrates and benchmarks with (every sample kills the same band,
+    so co-batched requests share a live-channel union and the engine's
+    exactness contract holds; DESIGN.md §2.2/§4). Contrast with
+    `synth_feature_map(channel_dead_frac=...)`, which kills random channels.
+    """
+    c = x.shape[-3]
+    n_dead = int(c * frac)
+    if n_dead <= 0:
+        return x
+    mask = (jnp.arange(c) < c - n_dead).astype(x.dtype)[:, None, None]
+    return x * mask
+
+
 def synth_feature_map(key, shape, sparsity: float, dtype=jnp.float32,
                       channel_dead_frac: float | None = None) -> jax.Array:
     """Random feature map with target sparsity — post-ReLU-like (non-negative).

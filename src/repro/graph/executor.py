@@ -1,0 +1,107 @@
+"""LayerGraph executor: walk the units, dispatch every op through the registry.
+
+This is the ONE place forward execution happens — `models/cnn.cnn_forward`
+(uniform impl), `pipeline/planner.run_plan` (per-layer planned impls) and the
+serving engine's compiled runners are all thin wrappers over `run_units` +
+`run_head` with different per-unit (kind, impl) assignments. Structural
+concerns (padding, unfused ReLU/pool around a plain conv, flatten, the dense
+head) live here; impl selection lives in `repro.graph.registry`; numerical
+kernels live in core/ and kernels/.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.ir import ConvUnit, LayerGraph, PoolSpec, graph_weights
+from repro.graph.registry import get_op, unit_impl
+
+# ---------------------------------------------------------------------------
+# Structural primitives (impl-independent)
+# ---------------------------------------------------------------------------
+
+
+def pad2d(x, pad: int):
+    """`pad`-pixel spatial zero padding, (C,H,W) / (N,C,H,W) (no-op pad=0)."""
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0),) * (x.ndim - 2) + ((pad, pad), (pad, pad)))
+
+
+def maxpool2d(x, pool: PoolSpec):
+    """Max-pool the trailing two dims per `pool` (p, stride, mode).
+
+    mode="valid" raises on an inexact tiling (the explicit-truncation guard —
+    shapes are static, so this is a plain python check even under jit);
+    "floor" drops the tail; "ceil" pads with -inf to keep a partial window.
+    """
+    from repro.graph.ir import pool_out_len
+
+    h, w = x.shape[-2:]
+    oh, ow = pool_out_len(h, pool), pool_out_len(w, pool)  # validates mode
+    pad_h = (oh - 1) * pool.s + pool.p - h if pool.mode == "ceil" else 0
+    pad_w = (ow - 1) * pool.s + pool.p - w if pool.mode == "ceil" else 0
+    lead = x.ndim - 2
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else jnp.iinfo(x.dtype).min,
+        jax.lax.max,
+        window_dimensions=(1,) * lead + (pool.p, pool.p),
+        window_strides=(1,) * lead + (pool.s, pool.s),
+        padding=((0, 0),) * lead + ((0, max(pad_h, 0)), (0, max(pad_w, 0))),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Unit / graph execution
+# ---------------------------------------------------------------------------
+
+
+def run_unit(x, w, unit: ConvUnit, kind: str, impl: str, block_c: int = 0):
+    """Execute one conv unit as (kind, impl): the fused op consumes the whole
+    conv+ReLU+pool triple; a plain conv gets the unit's ReLU / unfused pool
+    applied structurally around it."""
+    op = get_op(kind, impl)
+    xp = pad2d(x, unit.conv.pad)
+    if kind == "conv_pool":
+        return op.forward(xp, w, stride=unit.conv.stride, pool=unit.pool,
+                          block_c=block_c)
+    x = op.forward(xp, w, stride=unit.conv.stride, block_c=block_c)
+    if unit.relu:
+        x = jnp.maximum(x, 0.0)
+    if unit.pool is not None:
+        x = maxpool2d(x, unit.pool)
+    return x
+
+
+def run_units(x, conv_ws, units, impls, block_c: int = 0):
+    """Run the conv body: `impls` is one (kind, impl) pair per unit."""
+    for unit, (kind, impl), w in zip(units, impls, conv_ws):
+        x = run_unit(x, w, unit, kind, impl, block_c)
+    return x
+
+
+def run_head(x, dense_ws, head):
+    """Flatten + the dense head ((N,C,H,W) -> (N,classes), or unbatched)."""
+    x = x.reshape(x.shape[0], -1) if x.ndim == 4 else x.reshape(-1)
+    for w, spec in zip(dense_ws, head):
+        x = x @ w
+        if spec.relu:
+            x = jnp.maximum(x, 0.0)
+    return x
+
+
+def uniform_impls(graph: LayerGraph, impl: str) -> tuple:
+    """One whole-network impl string -> per-unit (kind, impl) assignments
+    (fused-family impls land on fusion-eligible units, their conv fallback
+    elsewhere — the registry's `unit_impl` rule)."""
+    return tuple(unit_impl(u, impl) for u in graph.units())
+
+
+def run_graph(graph: LayerGraph, params, x, impl: str = "dense",
+              block_c: int = 0):
+    """(C,H,W) or (N,C,H,W) -> logits through the whole graph at one uniform
+    impl. Per-layer planned execution is `repro.pipeline.run_plan`."""
+    conv_ws, dense_ws = graph_weights(params)
+    x = run_units(x, conv_ws, graph.units(), uniform_impls(graph, impl), block_c)
+    return run_head(x, dense_ws, graph.head())

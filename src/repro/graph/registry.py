@@ -1,0 +1,220 @@
+"""Op registry: THE one impl-dispatch site from planner to serving.
+
+Every (node kind, impl) pair maps to one `OpImpl` carrying its forward
+callable, its op-level cost hook (the autotuner's roofline fallback), and its
+fusion metadata. The string-keyed if/elif chains that used to be duplicated
+across `pipeline/planner.py`, `models/cnn.py` and the serving cost hooks all
+collapse into `get_op` lookups; adding an impl (or a new fused epilogue) is
+one `register_op` call, and planner/executor/serving pick it up unchanged.
+
+Kinds:
+  "conv"       plain convolution; ReLU / unfused pooling applied structurally
+               by the executor around it.
+  "conv_pool"  fused conv+ReLU+maxpool (the PECR family) — consumes the whole
+               conv unit in one op, the conv result never leaves VMEM/registers.
+
+The fusion rule lives here too: `fusion_eligible(unit)` says whether a conv
+unit's structure admits the fused epilogue (adjacent ReLU + pool,
+pooling stride == pool size, conv output tiled exactly by the pool — the
+Pallas epilogue floors, so a remainder would silently change semantics), and
+`fused_impl`/`conv_impl` map between a fused impl and the unfused conv impl of
+the same family ("pecr_pallas" <-> "ecr_pallas").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+from repro.graph.ir import ConvUnit
+
+# ---------------------------------------------------------------------------
+# Registry core
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OpImpl:
+    """One registered (kind, impl) implementation.
+
+    forward: kind "conv"      -> f(x_padded, w, *, stride, block_c) -> y
+             kind "conv_pool" -> f(x_padded, w, *, stride, pool, block_c) -> y
+    cost:    f(c, h, w, o, kh, kw, *, stride, occupancy, batch, [pool]) -> dict
+             with "flops"/"bytes"/"out_elems" (None = no model; autotune then
+             treats the layer as dense roofline).
+    sparse:  occupancy-dependent (skips dead channel blocks) — the planner may
+             only place these below occ_threshold, and the cost hook honours
+             the measured occupancy.
+    pallas:  realized as a Pallas kernel (vs a jnp oracle / XLA path).
+    fused_with: for kind "conv_pool", the kind-"conv" impl of the same family
+             (used when a unit's pool is NOT fusion-eligible); for kind
+             "conv", the kind-"conv_pool" impl it upgrades to when fusion IS
+             eligible (None = never fuses).
+    """
+
+    kind: str
+    impl: str
+    forward: Callable
+    cost: Callable | None = None
+    sparse: bool = False
+    pallas: bool = False
+    fused_with: str | None = None
+
+
+_OPS: dict = {}
+
+
+def register_op(op: OpImpl) -> OpImpl:
+    key = (op.kind, op.impl)
+    if key in _OPS:
+        raise ValueError(f"op {key} already registered")
+    _OPS[key] = op
+    return op
+
+
+def get_op(kind: str, impl: str) -> OpImpl:
+    try:
+        return _OPS[(kind, impl)]
+    except KeyError:
+        known = sorted(i for k, i in _OPS if k == kind)
+        raise ValueError(
+            f"unknown {kind} impl {impl!r} (registered: {known})") from None
+
+
+def list_ops(kind: str | None = None) -> tuple:
+    return tuple(op for op in _OPS.values() if kind is None or op.kind == kind)
+
+
+# ---------------------------------------------------------------------------
+# Fusion rule
+# ---------------------------------------------------------------------------
+
+
+def fusion_eligible(unit: ConvUnit) -> bool:
+    """conv+ReLU+pool -> PECR is legal iff the triple is adjacent AND the
+    pool is the kernel-supported form: stride == p (non-overlapping) and the
+    conv output tiles exactly (the fused epilogue floors; an inexact tiling
+    would silently truncate, exactly what PoolSpec mode='valid' guards)."""
+    pool = unit.pool
+    if pool is None or not unit.relu:
+        return False
+    if pool.s != pool.p or pool.mode == "ceil":
+        return False
+    _, oh, ow = unit.conv_out_shape
+    return oh % pool.p == 0 and ow % pool.p == 0
+
+
+def fused_impl(conv_impl: str) -> str | None:
+    """The kind-"conv_pool" impl of `conv_impl`'s family (None = no fusion)."""
+    return get_op("conv", conv_impl).fused_with
+
+
+def conv_impl(fused: str) -> str:
+    """The kind-"conv" impl a fused impl falls back to on unfusable units."""
+    op = get_op("conv_pool", fused)
+    if op.fused_with is None:
+        raise ValueError(f"fused impl {fused!r} declares no conv fallback")
+    return op.fused_with
+
+
+def unit_impl(unit: ConvUnit, impl: str) -> tuple:
+    """Resolve a requested impl against one unit's structure -> (kind, impl).
+
+    A fused-family request ("pecr", "pecr_pallas") becomes the fused op on
+    fusion-eligible units and the family's plain conv elsewhere; a plain conv
+    request passes through. This is the uniform-impl entry `models/cnn` uses;
+    the planner makes the same call per layer with its own sparse decision.
+    """
+    if ("conv_pool", impl) in _OPS:
+        if fusion_eligible(unit):
+            return ("conv_pool", impl)
+        return ("conv", conv_impl(impl))
+    get_op("conv", impl)  # validate
+    return ("conv", impl)
+
+
+# ---------------------------------------------------------------------------
+# Registrations — the entire impl surface, in one place
+# ---------------------------------------------------------------------------
+
+
+def _conv_dense(xp, w, *, stride, block_c=0):
+    from repro.core.ecr import conv2d_dense
+
+    return conv2d_dense(xp, w, stride)
+
+
+def _conv_im2col(xp, w, *, stride, block_c=0):
+    from repro.core.ecr import conv2d_im2col
+
+    return conv2d_im2col(xp, w, stride)
+
+
+def _conv_ecr(xp, w, *, stride, block_c=0):
+    from repro.core.ecr import conv2d_ecr
+
+    return conv2d_ecr(xp, w, stride)
+
+
+def _conv_ecr_pallas(xp, w, *, stride, block_c=0):
+    from repro.kernels.ecr_conv.ops import ecr_conv
+
+    return ecr_conv(xp, w, stride, block_c=block_c)
+
+
+def _conv_pool_unfused(xp, w, *, stride, pool, block_c=0):
+    from repro.core.pecr import conv_pool_unfused
+
+    return conv_pool_unfused(xp, w, stride, pool.p, pool.s)
+
+
+def _conv_pool_pecr(xp, w, *, stride, pool, block_c=0):
+    from repro.core.pecr import conv_pool_pecr
+
+    return conv_pool_pecr(xp, w, stride, pool.p, pool.s)
+
+
+def _conv_pool_pecr_pallas(xp, w, *, stride, pool, block_c=0):
+    from repro.kernels.conv_pool.ops import fused_conv_pool
+
+    # p_s rides through so the kernel's stride==p assertion keeps guarding
+    return fused_conv_pool(xp, w, stride, pool.p, p_s=pool.s, block_c=block_c)
+
+
+def _conv_cost(c, h, w, o, kh, kw, **kw_args):
+    from repro.kernels.ecr_conv.ops import ecr_conv_cost
+
+    return ecr_conv_cost(c, h, w, o, kh, kw, **kw_args)
+
+
+def _conv_pool_cost(c, h, w, o, kh, kw, **kw_args):
+    from repro.kernels.conv_pool.ops import conv_pool_cost
+
+    return conv_pool_cost(c, h, w, o, kh, kw, **kw_args)
+
+
+def _conv_pool_unfused_cost(c, h, w, o, kh, kw, *, pool=2, dtype_bytes=4, **kw_args):
+    """Unfused conv -> ReLU -> pool: the conv cost plus the intermediate
+    write/read round trip and the pooled write that PECR fusion deletes
+    (the comparison baseline of DESIGN.md §2.3)."""
+    from repro.kernels.ecr_conv.ops import ecr_conv_cost
+
+    base = ecr_conv_cost(c, h, w, o, kh, kw, dtype_bytes=dtype_bytes, **kw_args)
+    conv_out = base["out_elems"] * dtype_bytes
+    return {"flops": base["flops"] + base["out_elems"],  # pool max on the VPU
+            "bytes": base["bytes"] + conv_out + conv_out / (pool * pool),
+            "out_elems": base["out_elems"] // (pool * pool)}
+
+
+register_op(OpImpl("conv", "dense", _conv_dense, cost=_conv_cost))
+register_op(OpImpl("conv", "im2col", _conv_im2col, cost=_conv_cost))
+register_op(OpImpl("conv", "ecr", _conv_ecr, cost=_conv_cost, sparse=True,
+                   fused_with="pecr"))
+register_op(OpImpl("conv", "ecr_pallas", _conv_ecr_pallas, cost=_conv_cost,
+                   sparse=True, pallas=True, fused_with="pecr_pallas"))
+register_op(OpImpl("conv_pool", "unfused", _conv_pool_unfused,
+                   cost=_conv_pool_unfused_cost))
+register_op(OpImpl("conv_pool", "pecr", _conv_pool_pecr, cost=_conv_pool_cost,
+                   sparse=True, fused_with="ecr"))
+register_op(OpImpl("conv_pool", "pecr_pallas", _conv_pool_pecr_pallas,
+                   cost=_conv_pool_cost, sparse=True, pallas=True,
+                   fused_with="ecr_pallas"))

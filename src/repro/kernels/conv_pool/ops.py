@@ -1,4 +1,11 @@
-"""Jitted wrapper for the PECR fused conv+ReLU+maxpool kernel."""
+"""Jitted wrapper for the PECR fused conv+ReLU+maxpool kernel.
+
+Registered as ("conv_pool", "pecr_pallas") in `repro.graph.registry`
+(forward = `fused_conv_pool`, cost hook = `conv_pool_cost`). The kernel form
+requires pooling stride == pool size; the registry's `fusion_eligible` rule
+only routes units here when that (and exact tiling) holds — overlapping or
+ceil-mode pools run as ECR conv + an unfused pool instead.
+"""
 from __future__ import annotations
 
 from functools import partial

@@ -1,4 +1,10 @@
-"""Jitted wrapper: channel-block occupancy ("compression") + pallas ECR conv."""
+"""Jitted wrapper: channel-block occupancy ("compression") + pallas ECR conv.
+
+Registered as ("conv", "ecr_pallas") in `repro.graph.registry` (forward =
+`ecr_conv`, cost hook = `ecr_conv_cost`); the stride/kernel parameters a
+`ConvSpec` carries flow straight through — the kernel supports any k and the
+strides the paper evaluates (Figs 9-10) plus AlexNet's stride-4 first conv.
+"""
 from __future__ import annotations
 
 from functools import partial

@@ -1,10 +1,14 @@
-"""CNN serving launcher: VGG-19 single-image requests through the
-sparsity-aware serving engine (dynamic batcher + plan cache + adaptive
-re-planning), over a deterministic simulated-clock request stream that
-carries real measured execution times.
+"""CNN serving launcher: single-image requests through the sparsity-aware
+serving engine (dynamic batcher + plan cache + adaptive re-planning), over a
+deterministic simulated-clock request stream that carries real measured
+execution times. Any LayerGraph network serves through the same spine —
+pick one with --model.
 
 Run (reduced, CPU-budget):
     PYTHONPATH=src python -m repro.launch.serve_cnn --rate 50 --n-requests 24
+Other networks:
+    PYTHONPATH=src python -m repro.launch.serve_cnn --model lenet
+    PYTHONPATH=src python -m repro.launch.serve_cnn --model alexnet
 Autotuned plan:
     PYTHONPATH=src python -m repro.launch.serve_cnn --autotune
 """
@@ -17,71 +21,85 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.vgg19_sparse import CNNConfig
-from repro.models.cnn import init_cnn, shift_dead_channels
+from repro.configs.vgg19_sparse import CNNConfig, vgg19_graph
+from repro.graph import LayerGraph, init_graph
+from repro.models.cnn import shift_dead_channels
 from repro.serving import Engine, SimClock, autotune, replay_stream
 
 log = logging.getLogger("repro.serve_cnn")
 
+MODELS = ("vgg19", "lenet", "alexnet")
 
-def serving_config(full: bool = False) -> CNNConfig:
-    """Reduced: a 3-conv stack CPU tests can serve in seconds. Full: the
-    whole VGG-19 depth at half resolution (the benchmarks' CPU budget)."""
+
+def serving_graph(model: str = "vgg19", full: bool = False) -> LayerGraph:
+    """Reduced: stacks CPU tests can serve in seconds. Full: the real
+    network depth (VGG at reduced resolution — the CPU budget; 96 is the
+    largest such size whose five pooling stages all tile exactly, where the
+    old 112 relied on the silent 7 -> 3 truncation PoolSpec now rejects)."""
+    if model == "lenet":
+        from repro.configs.lenet import LENET, LENET_REDUCED
+
+        return LENET if full else LENET_REDUCED
+    if model == "alexnet":
+        from repro.configs.alexnet import ALEXNET, ALEXNET_REDUCED
+
+        return ALEXNET if full else ALEXNET_REDUCED
+    if model != "vgg19":
+        raise ValueError(f"unknown --model {model!r} (choose from {MODELS})")
     if full:
-        return CNNConfig(img_size=112)
-    return CNNConfig(name="vgg-tiny", in_channels=16, img_size=16,
-                     plan=((16, 2), (32, 1)), n_classes=16)
+        return vgg19_graph(CNNConfig(img_size=96))
+    return vgg19_graph(CNNConfig(name="vgg-tiny", in_channels=16, img_size=16,
+                                 plan=((16, 2), (32, 1)), n_classes=16))
 
 
-def synth_requests(ccfg: CNNConfig, n: int, seed: int = 0,
-                   dead_frac: float = 0.5):
+def synth_requests(graph, n: int, seed: int = 0, dead_frac: float = 0.5):
     """Single-image requests with a shared dead-channel band (the trained-net
-    activation statistic the planner exploits; DESIGN.md §2.2)."""
-    n_dead = int(ccfg.in_channels * dead_frac)
-    imgs = []
-    for i in range(n):
-        x = np.array(jax.random.uniform(
-            jax.random.PRNGKey(seed * 1000 + i),
-            (ccfg.in_channels, ccfg.img_size, ccfg.img_size)), np.float32)
-        if n_dead:
-            x[ccfg.in_channels - n_dead:] = 0.0
-        imgs.append(jnp.asarray(x))
-    return imgs
+    activation statistic the planner exploits; DESIGN.md §2.2). `graph` is a
+    LayerGraph or a legacy CNNConfig."""
+    from repro.core import dead_channel_band
+    from repro.graph import as_graph
+
+    shape = as_graph(graph).in_shape
+    return [dead_channel_band(
+        jax.random.uniform(jax.random.PRNGKey(seed * 1000 + i), shape),
+        dead_frac) for i in range(n)]
 
 
-def serve_cnn(*, full: bool = False, n_requests: int = 24, rate: float = 50.0,
+def serve_cnn(*, model: str = "vgg19", full: bool = False,
+              n_requests: int = 24, rate: float = 50.0,
               max_batch: int = 8, deadline_ms: float = 10.0,
               occ_threshold: float = 0.75, block_c: int = 8,
               do_autotune: bool = False, replan_band: float = 0.15,
               seed: int = 0) -> dict:
-    ccfg = serving_config(full)
-    params = shift_dead_channels(init_cnn(jax.random.PRNGKey(seed), ccfg))
-    calib = jnp.stack(synth_requests(ccfg, 2, seed=seed + 1))
+    graph = serving_graph(model, full)
+    params = shift_dead_channels(init_graph(jax.random.PRNGKey(seed), graph))
+    calib = jnp.stack(synth_requests(graph, 2, seed=seed + 1))
     plan = None
     if do_autotune:
-        result = autotune(params, calib, ccfg, thresholds=(0.5, 0.75, 0.9),
+        result = autotune(params, calib, graph, thresholds=(0.5, 0.75, 0.9),
                           block_cs=(0, 8))
         plan = result.plan
         log.info("autotune picked occ_threshold=%.2f block_c=%d (model fallback: %s)",
                  result.best.occ_threshold, result.best.block_c, result.used_model)
     clock = SimClock()
-    engine = Engine(params, ccfg, plan=plan, calib=calib,
+    engine = Engine(params, graph=graph, plan=plan, calib=calib,
                     occ_threshold=occ_threshold, block_c=block_c,
                     max_batch=max_batch, deadline_s=deadline_ms * 1e-3,
                     clock=clock, replan_band=replan_band)
-    log.info("plan: %s", " ".join(
+    log.info("%s plan: %s", graph.name, " ".join(
         f"conv{lp.index + 1}={lp.impl}@{lp.occupancy:.2f}" for lp in engine.plan.layers))
     compiled = engine.warmup()
     log.info("warmed %d bucket programs (buckets=%s)", compiled,
              engine.batcher.exec_buckets())
 
     t_start = clock()
-    results = replay_stream(engine, synth_requests(ccfg, n_requests, seed=seed + 2),
+    results = replay_stream(engine, synth_requests(graph, n_requests, seed=seed + 2),
                             rate_rps=rate)
     makespan = clock() - t_start
     lat_ms = np.array(sorted(r.latency_s for r in results)) * 1e3
     stats = engine.stats()
     summary = {
+        "model": graph.name,
         "requests": len(results),
         "rate_rps": rate,
         "throughput_rps": len(results) / max(makespan, 1e-9),
@@ -103,7 +121,9 @@ def serve_cnn(*, full: bool = False, n_requests: int = 24, rate: float = 50.0,
 def main():
     logging.basicConfig(level=logging.INFO, format="%(message)s")
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--full", action="store_true", help="full VGG-19 depth (slow on CPU)")
+    ap.add_argument("--model", choices=MODELS, default="vgg19",
+                    help="which LayerGraph network to serve")
+    ap.add_argument("--full", action="store_true", help="full network depth (slow on CPU)")
     ap.add_argument("--n-requests", type=int, default=24)
     ap.add_argument("--rate", type=float, default=50.0, help="offered request rate (req/s)")
     ap.add_argument("--max-batch", type=int, default=8)
@@ -116,11 +136,11 @@ def main():
     ap.add_argument("--autotune", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    serve_cnn(full=args.full, n_requests=args.n_requests, rate=args.rate,
-              max_batch=args.max_batch, deadline_ms=args.deadline_ms,
-              occ_threshold=args.occ_threshold, block_c=args.block_c,
-              do_autotune=args.autotune, replan_band=args.replan_band,
-              seed=args.seed)
+    serve_cnn(model=args.model, full=args.full, n_requests=args.n_requests,
+              rate=args.rate, max_batch=args.max_batch,
+              deadline_ms=args.deadline_ms, occ_threshold=args.occ_threshold,
+              block_c=args.block_c, do_autotune=args.autotune,
+              replan_band=args.replan_band, seed=args.seed)
 
 
 if __name__ == "__main__":

@@ -8,8 +8,12 @@ conv stack runnable through every implementation the paper compares:
                        for the stage-final layer (paper §V)
   impl = "ecr_pallas" / "pecr_pallas"  same, through the Pallas TPU kernels
 
-All convs are 3x3 stride 1 with explicit 1-pixel padding (== SAME), pooling is
-2x2/2 max — the VGG-19 configuration the paper benchmarks (Figs 9, 12).
+Since the LayerGraph refactor this module holds no dispatch of its own: a
+`CNNConfig` lowers onto the IR via `repro.configs.vgg19_sparse.vgg19_graph`
+and executes through `repro.graph.executor` (the registry resolves every
+(kind, impl) pair, including which stage-final layers fuse into PECR). Other
+networks (`repro.configs.lenet` / `.alexnet`) use `repro.graph.run_graph` /
+`init_graph` directly — VGG-19 is one graph constructor among several.
 
 Also holds the whisper conv frontend (a STUB for the assigned shapes; the
 dry-run feeds precomputed frame embeddings — this exists so the ECR conv has a
@@ -17,17 +21,19 @@ real consumer in the audio arch and is exercised by unit tests).
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
-from repro.configs.vgg19_sparse import CNNConfig
-from repro.core.ecr import conv2d
-from repro.core.pecr import conv_pool
+from repro.configs.vgg19_sparse import CNNConfig, vgg19_graph
+from repro.graph.executor import maxpool2d, pad2d, run_head, run_units, uniform_impls
+from repro.graph.ir import PoolSpec, graph_weights
 
 
 def init_cnn(key, ccfg: CNNConfig, dtype=jnp.float32) -> dict:
+    """Random VGG-style params in the legacy {"stages", "fc1", "fc2"} layout
+    (graph-native callers use `repro.graph.init_graph` instead). Classifier
+    dims come from the graph's static shape inference — no trace needed."""
+    graph = vgg19_graph(ccfg)
     keys = jax.random.split(key, 64)
     ki = iter(keys)
     stages = []
@@ -40,11 +46,7 @@ def init_cnn(key, ccfg: CNNConfig, dtype=jnp.float32) -> dict:
             convs.append(w)
             c_in = c_out
         stages.append(convs)
-    # classifier dims from a shape-only trace
-    feat = jax.eval_shape(partial(_features, impl="dense", ccfg=ccfg),
-                          {"stages": stages},
-                          jax.ShapeDtypeStruct((ccfg.in_channels, ccfg.img_size, ccfg.img_size), dtype))
-    flat = feat.shape[0] * feat.shape[1] * feat.shape[2]
+    flat = graph.flat_dim()
     fc1 = jax.random.normal(next(ki), (flat, 512), dtype) * flat ** -0.5
     fc2 = jax.random.normal(next(ki), (512, ccfg.n_classes), dtype) * 512 ** -0.5
     return {"stages": stages, "fc1": fc1, "fc2": fc2}
@@ -52,37 +54,29 @@ def init_cnn(key, ccfg: CNNConfig, dtype=jnp.float32) -> dict:
 
 def _pad1(x):
     """1-pixel spatial padding, single image (C,H,W) or batch (N,C,H,W)."""
-    return jnp.pad(x, ((0, 0),) * (x.ndim - 2) + ((1, 1), (1, 1)))
+    return pad2d(x, 1)
 
 
-def _maxpool(x, p):
-    """Unfused p x p / p max-pool over the trailing two (spatial) dims."""
-    oh, ow = x.shape[-2:]
-    lead = x.shape[:-2]
-    x = x[..., : oh // p * p, : ow // p * p]
-    return x.reshape(*lead, oh // p, p, ow // p, p).max(axis=(-3, -1))
+def _maxpool(x, p, stride: int = 0, mode: str = "valid"):
+    """p x p max-pool over the trailing two (spatial) dims.
+
+    mode="valid" (default) RAISES when the windows do not tile the map — the
+    old behaviour silently truncated the tail (`x[..., :oh//p*p, :ow//p*p]`),
+    which AlexNet/LeNet shapes actually hit; pass mode="floor" to truncate
+    deliberately or mode="ceil" to keep a -inf-padded partial window."""
+    return maxpool2d(x, PoolSpec(p, stride=stride, mode=mode))
 
 
 def _features(params, img, *, impl: str, ccfg: CNNConfig):
     """(C,H,W) -> (C_out, h, w) after all conv stages; batched (N,C,H,W) ->
     (N, C_out, h, w). Every conv/conv_pool call carries the whole batch, so
     each layer is ONE jitted op (batched Pallas grid for the *_pallas impls,
-    native lax / vmapped oracle batching otherwise)."""
-    x = img
-    p = ccfg.pool_size
-    for convs in params["stages"]:
-        for i, w in enumerate(convs):
-            last = i == len(convs) - 1
-            xp = _pad1(x)
-            if last and impl in ("pecr", "pecr_pallas"):
-                fused_impl = "pecr" if impl == "pecr" else "pecr_pallas"
-                x = conv_pool(xp, w, 1, p, None, fused_impl)  # conv+ReLU+pool fused
-            else:
-                conv_impl = {"pecr": "ecr", "pecr_pallas": "ecr_pallas"}.get(impl, impl)
-                x = jnp.maximum(conv2d(xp, w, 1, conv_impl), 0.0)
-                if last:
-                    x = _maxpool(x, p)
-    return x
+    native lax / vmapped oracle batching otherwise). Impl resolution — which
+    units fuse, which conv family backs a fused request — is the registry's
+    `unit_impl` rule, not local string matching."""
+    graph = vgg19_graph(ccfg)
+    conv_ws, _ = graph_weights(params)
+    return run_units(img, conv_ws, graph.units(), uniform_impls(graph, impl))
 
 
 def cnn_forward(params, img, impl: str = "dense", ccfg: CNNConfig = CNNConfig()):
@@ -91,10 +85,10 @@ def cnn_forward(params, img, impl: str = "dense", ccfg: CNNConfig = CNNConfig())
     The batch flows through the conv stack as whole-batch layer calls (not a
     python loop over samples); see `cnn_forward_batch` for the explicit API.
     """
+    graph = vgg19_graph(ccfg)
     x = _features(params, img, impl=impl, ccfg=ccfg)
-    x = x.reshape(x.shape[0], -1) if img.ndim == 4 else x.reshape(-1)
-    x = jnp.maximum(x @ params["fc1"], 0.0)
-    return x @ params["fc2"]
+    _, dense_ws = graph_weights(params)
+    return run_head(x, dense_ws, graph.head())
 
 
 def cnn_forward_batch(params, imgs, impl: str = "dense", ccfg: CNNConfig = CNNConfig()):
@@ -116,35 +110,36 @@ def shift_dead_channels(params, rate: float = 0.04, shift: float = 0.12):
     (paper Fig. 2); random init does not. Shift a depth-growing fraction of
     each conv's output filters negative so ReLU kills those channels — used by
     `benchmarks/fig2_sparsity.py` and the planner demo to produce realistic
-    channel-block occupancy without trained weights.
+    channel-block occupancy without trained weights. Works on both the legacy
+    {"stages"} layout and the graph-native {"conv", "dense"} layout.
     """
-    shifted = {"stages": [], "fc1": params["fc1"], "fc2": params["fc2"]}
-    depth = 0
-    for convs in params["stages"]:
-        row = []
-        for w in convs:
-            key = jax.random.PRNGKey(depth)
-            bias_mask = (jax.random.uniform(key, (w.shape[0], 1, 1, 1)) <
-                         rate * depth).astype(w.dtype)
-            row.append(w * (1.0 - bias_mask) - shift * bias_mask * jnp.abs(w))
-            depth += 1
-        shifted["stages"].append(row)
-    return shifted
+    conv_ws, _ = graph_weights(params)
+    shifted_ws = []
+    for depth, w in enumerate(conv_ws):
+        key = jax.random.PRNGKey(depth)
+        bias_mask = (jax.random.uniform(key, (w.shape[0], 1, 1, 1)) <
+                     rate * depth).astype(w.dtype)
+        shifted_ws.append(w * (1.0 - bias_mask) - shift * bias_mask * jnp.abs(w))
+    if "stages" in params:
+        out = {"stages": [], "fc1": params["fc1"], "fc2": params["fc2"]}
+        it = iter(shifted_ws)
+        for convs in params["stages"]:
+            out["stages"].append([next(it) for _ in convs])
+        return out
+    return {"conv": shifted_ws, "dense": list(params["dense"])}
 
 
 def cnn_feature_maps(params, img, ccfg: CNNConfig = CNNConfig()):
     """The paper's data set (§VI-A): every feature map ENTERING a conv layer."""
+    from repro.graph.executor import run_unit
+
+    graph = vgg19_graph(ccfg)
+    conv_ws, _ = graph_weights(params)
     maps = []
     x = img
-    p = ccfg.pool_size
-    for convs in params["stages"]:
-        for i, w in enumerate(convs):
-            maps.append(x)
-            x = jnp.maximum(conv2d(_pad1(x), w, 1, "dense"), 0.0)
-            if i == len(convs) - 1:
-                o, oh, ow = x.shape
-                x = x[:, : oh // p * p, : ow // p * p]
-                x = x.reshape(o, oh // p, p, ow // p, p).max(axis=(2, 4))
+    for unit, w in zip(graph.units(), conv_ws):
+        maps.append(x)
+        x = run_unit(x, w, unit, "conv", "dense")
     return maps
 
 

@@ -1,11 +1,14 @@
 """Batched sparse-CNN inference pipeline (planner + executor).
 
-`plan_network` walks a `CNNConfig` + params with a calibration batch, measures
-the channel-block occupancy each conv layer actually runs at, and decides per
-layer between the dense path, the ECR sparse kernel, and the fused PECR
-conv+ReLU+pool kernel. `run_plan` executes the emitted layer sequence over a
-whole batch, one jitted op per fused layer. Future serving/autotuning PRs
-hang off the `PipelinePlan` artifact (it is a plain, inspectable schedule).
+`plan_network` walks any `LayerGraph` (VGG-19, LeNet, AlexNet, ...; a legacy
+`CNNConfig` is lowered automatically) + params with a calibration batch,
+measures the channel-block occupancy each conv unit actually runs at, and
+decides per layer between the dense path, the ECR sparse kernel, and — where
+the registry's fusion rule admits it — the fused PECR conv+ReLU+pool kernel.
+`run_plan` executes the emitted layer sequence over a whole batch, one jitted
+op per planned layer, every op resolved through `repro.graph.registry`.
+Serving and autotuning hang off the `PipelinePlan` artifact (a plain,
+inspectable schedule that carries its graph).
 """
 from repro.pipeline.planner import (
     LayerPlan,

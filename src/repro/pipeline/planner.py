@@ -1,44 +1,65 @@
-"""Per-layer dense/ECR/PECR planning for batched VGG-style inference.
+"""Per-layer dense/ECR/PECR planning over the LayerGraph IR.
 
 The paper's win is layer-dependent (Fig. 9: early layers are dense and big,
 deep layers are small and very sparse), so a whole-network setting is always
-wrong somewhere. The planner measures, per conv layer, the channel-block
-occupancy the ECR kernel would actually run at on a calibration batch — the
-post-compaction ceil(n_live/bc)/n_cb of DESIGN.md §2.2, averaged over samples
-— and emits a `PipelinePlan`: one `LayerPlan` per conv, stage-final layers
-fused with their pooling when the sparse path is chosen (PECR) and left as
-conv + unfused pool otherwise.
+wrong somewhere. The planner walks a `LayerGraph` (any linear CNN — VGG-19,
+LeNet, AlexNet; a `CNNConfig` is lowered via `as_graph`) on a calibration
+batch, measures per conv unit the channel-block occupancy the ECR kernel
+would actually run at — the post-compaction ceil(n_live/bc)/n_cb of
+DESIGN.md §2.2, averaged over samples — and emits a `PipelinePlan`: one
+`LayerPlan` per conv unit, fused with its pooling (PECR) when the unit is
+sparse AND the registry's fusion rule admits it (adjacent ReLU+pool,
+stride == p, exact tiling), left as conv + unfused pool otherwise.
 
-The plan is a static, hashable schedule: `run_plan` executes it over any
-batch of the calibrated shape, one jitted whole-batch op per layer. This is
-the seam where serving (plan once, execute per request batch) and autotuning
-(search over thresholds/block sizes, keep the best plan) attach.
+The plan is a static, hashable schedule that carries its graph: `run_plan`
+executes it over any batch of the calibrated shape, one jitted whole-batch op
+per layer, every op resolved through the registry (`repro.graph.registry`) —
+there is no impl dispatch here. This is the seam where serving (plan once,
+execute per request batch) and autotuning (search over thresholds/block
+sizes, keep the best plan) attach.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
-import jax
 import jax.numpy as jnp
 
-from repro.configs.vgg19_sparse import CNNConfig
-from repro.core.ecr import conv2d
-from repro.core.pecr import conv_pool
-from repro.models.cnn import _maxpool, _pad1
+from repro.graph import as_graph
+from repro.graph.executor import run_head, run_unit
+from repro.graph.ir import ConvSpec, LayerGraph, PoolSpec, graph_weights
+from repro.graph.registry import fusion_eligible, get_op
 
 
 @dataclass(frozen=True)
 class LayerPlan:
-    """One conv layer's placement decision."""
+    """One conv unit's placement decision."""
 
     index: int  # conv index in network order (0-based)
-    stage: int  # VGG stage
+    stage: int  # pooling stage (number of pools crossed before this conv)
     slot: int  # index within the stage
-    kind: str  # "conv" | "conv_pool" (stage-final fuses/bundles the pool)
+    kind: str  # "conv" | "conv_pool" (the chosen op kind; fused == conv_pool)
     impl: str  # "dense" | "ecr_pallas" | "pecr_pallas" | "ecr" | "pecr"
     occupancy: float  # measured mean channel-block occupancy of the input
     in_shape: tuple  # (C, H, W) entering the layer (pre-padding)
     out_shape: tuple  # (C, H, W) leaving the layer (post-pool if any)
+    conv: ConvSpec = ConvSpec(0)  # the unit's conv node (k, stride, pad)
+    relu: bool = True  # adjacent ReLU present
+    pool: PoolSpec | None = None  # adjacent pool node (None = in-stage conv)
+
+    def to_unit(self):
+        """The `ConvUnit` this plan entry executes. The LayerPlan is the
+        single source of structural truth at run time — `run_plan` executes
+        from here, never by re-walking `plan.graph` (a mismatched graph must
+        not be able to change what a validated plan runs)."""
+        from repro.graph.ir import ConvUnit
+
+        if self.conv.c_out == 0:
+            raise ValueError(
+                f"conv_{self.index + 1} carries no ConvSpec — this plan "
+                "predates the LayerGraph IR; rebuild it with plan_network")
+        return ConvUnit(index=self.index, stage=self.stage, slot=self.slot,
+                        conv=self.conv, relu=self.relu, pool=self.pool,
+                        in_shape=self.in_shape, out_shape=self.out_shape)
 
 
 @dataclass(frozen=True)
@@ -46,16 +67,17 @@ class PipelinePlan:
     layers: tuple  # tuple[LayerPlan, ...]
     occ_threshold: float
     block_c: int  # 0 = auto per layer (ops._pick_block_c)
+    graph: LayerGraph | None = None  # the IR the plan was made for
 
     def counts(self) -> dict:
         c = {"dense": 0, "sparse": 0, "fused": 0}
         for lp in self.layers:
-            if lp.impl == "dense":
-                c["dense"] += 1
-            else:
+            if get_op(lp.kind, lp.impl).sparse:
                 c["sparse"] += 1
                 if lp.kind == "conv_pool":
                     c["fused"] += 1
+            else:
+                c["dense"] += 1
         return c
 
 
@@ -70,8 +92,10 @@ def occupancy_stat(x, block_c: int = 0, n_valid=None):
     statistic to the first `n_valid` samples — the serving engine measures
     occupancy over the real requests of a padded bucket, and the all-zero pad
     samples contribute nothing to the union so the masked measurement equals
-    what the kernel's per-sample schedules do for the real samples. Returns a
-    scalar array (fraction of channel-block work NOT skipped).
+    what the kernel's per-sample schedules do for the real samples. `n_valid`
+    is clamped to [0, N]: 0 (a bucket of pure pads) reports 0.0 occupancy,
+    and a count beyond the batch cannot deflate the mean. Returns a scalar
+    array (fraction of channel-block work NOT skipped).
     """
     from repro.kernels.ecr_conv.ops import _pick_block_c
 
@@ -83,16 +107,16 @@ def occupancy_stat(x, block_c: int = 0, n_valid=None):
     n_cb = -(-c // bc)
     live = jnp.any(x != 0, axis=(2, 3))  # (N, C) per-sample live channels
     if n_valid is not None:
-        live = live & (jnp.arange(n) < jnp.asarray(n_valid, jnp.int32))[:, None]
+        nv = jnp.clip(jnp.asarray(n_valid, jnp.int32), 0, n)
+        live = live & (jnp.arange(n) < nv)[:, None]
     union_order = jnp.argsort(~jnp.any(live, axis=0), stable=True)
     packed = live[:, union_order]  # one shared permutation, like the kernel
     packed = jnp.pad(packed, ((0, 0), (0, n_cb * bc - c)))
     blk_live = packed.reshape(n, n_cb, bc).any(axis=2)  # (N, n_cb)
     if n_valid is None:
         return blk_live.mean()
-    nv = jnp.maximum(jnp.asarray(n_valid, jnp.int32), 1)
     per_sample = blk_live.mean(axis=1)  # (N,)
-    return jnp.where(jnp.arange(n) < nv, per_sample, 0.0).sum() / nv
+    return jnp.where(jnp.arange(n) < nv, per_sample, 0.0).sum() / jnp.maximum(nv, 1)
 
 
 def measure_occupancy(x, block_c: int = 0) -> float:
@@ -100,60 +124,69 @@ def measure_occupancy(x, block_c: int = 0) -> float:
     return float(occupancy_stat(x, block_c))
 
 
-def _dense_oracle_step(x, w, last, p):
-    """Reference forward step used only to produce the next calibration input."""
-    x = jnp.maximum(conv2d(_pad1(x), w, 1, "dense"), 0.0)
-    return _maxpool(x, p) if last else x
-
-
 def plan_network(
     params,
     calib,
-    ccfg: CNNConfig = CNNConfig(),
+    graph=None,
     *,
     occ_threshold: float = 0.75,
     block_c: int = 0,
     use_pallas: bool = True,
 ) -> PipelinePlan:
-    """Walk the conv stack on a calibration batch and emit the layer schedule.
+    """Walk the graph's conv units on a calibration batch, emit the schedule.
 
-    A layer goes sparse when its measured occupancy is <= occ_threshold (the
-    skipped blocks must pay for the compaction gather; at occupancy ~1.0 the
-    sparse path is pure overhead). A stage-final sparse layer is fused with
-    its pooling (PECR); a stage-final dense layer keeps the unfused pool.
+    `graph` is a `LayerGraph` or a legacy `CNNConfig` (lowered via
+    `as_graph`; None = full VGG-19). A unit goes sparse when its measured
+    occupancy is <= occ_threshold (the skipped blocks must pay for the
+    compaction gather; at occupancy ~1.0 the sparse path is pure overhead).
+    A sparse unit whose structure passes the registry's fusion rule runs the
+    fused conv+ReLU+pool op; any other pool stays unfused.
     """
+    graph = as_graph(graph)
     if calib.ndim == 3:
         calib = calib[None]
     sparse_conv = "ecr_pallas" if use_pallas else "ecr"
-    fused_conv = "pecr_pallas" if use_pallas else "pecr"
-    p = ccfg.pool_size
+    conv_ws, _ = graph_weights(params)
     layers = []
     x = calib
-    idx = 0
-    for s, convs in enumerate(params["stages"]):
-        for i, w in enumerate(convs):
-            last = i == len(convs) - 1
-            occ = measure_occupancy(x, block_c)
-            in_shape = tuple(x.shape[1:])
-            go_sparse = occ <= occ_threshold
-            x = _dense_oracle_step(x, w, last, p)
-            layers.append(
-                LayerPlan(
-                    index=idx,
-                    stage=s,
-                    slot=i,
-                    kind="conv_pool" if last else "conv",
-                    impl=(fused_conv if last else sparse_conv) if go_sparse else "dense",
-                    occupancy=occ,
-                    in_shape=in_shape,
-                    out_shape=tuple(x.shape[1:]),
-                )
+    for unit, w in zip(graph.units(), conv_ws):
+        occ = measure_occupancy(x, block_c)
+        go_sparse = occ <= occ_threshold
+        if go_sparse:
+            fused = get_op("conv", sparse_conv).fused_with
+            if fused is not None and fusion_eligible(unit):
+                kind, impl = "conv_pool", fused
+            else:
+                kind, impl = "conv", sparse_conv
+        else:
+            kind, impl = "conv", "dense"
+        # the dense oracle produces the next calibration input
+        x = run_unit(x, w, unit, "conv", "dense")
+        layers.append(
+            LayerPlan(
+                index=unit.index,
+                stage=unit.stage,
+                slot=unit.slot,
+                kind=kind,
+                impl=impl,
+                occupancy=occ,
+                in_shape=unit.in_shape,
+                out_shape=unit.out_shape,
+                conv=unit.conv,
+                relu=unit.relu,
+                pool=unit.pool,
             )
-            idx += 1
-    return PipelinePlan(layers=tuple(layers), occ_threshold=occ_threshold, block_c=block_c)
+        )
+    return PipelinePlan(layers=tuple(layers), occ_threshold=occ_threshold,
+                        block_c=block_c, graph=graph)
 
 
-def validate_plan(plan: PipelinePlan, params, imgs) -> None:
+def _plan_graph(plan: PipelinePlan, fallback=None) -> LayerGraph:
+    """The graph a plan executes (pre-IR plans fall back to a CNNConfig)."""
+    return plan.graph if plan.graph is not None else as_graph(fallback)
+
+
+def validate_plan(plan: PipelinePlan, params, imgs, graph=None) -> None:
     """Raise a clear ValueError on any plan/params/input mismatch.
 
     `run_plan` zips the plan with the params' weights and runs whatever the
@@ -173,26 +206,37 @@ def validate_plan(plan: PipelinePlan, params, imgs) -> None:
         raise ValueError(
             f"plan was calibrated for input shape {tuple(plan.layers[0].in_shape)}, "
             f"got images of shape {in_shape}")
-    flat_weights = [w for convs in params["stages"] for w in convs]
-    if len(flat_weights) != len(plan.layers):
+    conv_ws, dense_ws = graph_weights(params)
+    if len(conv_ws) != len(plan.layers):
         raise ValueError(
             f"plan has {len(plan.layers)} conv layers but params carry "
-            f"{len(flat_weights)} conv weights (zip would silently truncate)")
-    for lp, w in zip(plan.layers, flat_weights):
+            f"{len(conv_ws)} conv weights (zip would silently truncate)")
+    for lp, w in zip(plan.layers, conv_ws):
         if w.shape[1] != lp.in_shape[0]:
             raise ValueError(
                 f"conv_{lp.index + 1}: plan expects C_in={lp.in_shape[0]}, "
                 f"weight has C_in={w.shape[1]}")
+    g = _plan_graph(plan, graph)
+    if len(g.units()) != len(plan.layers):
+        raise ValueError(
+            f"plan has {len(plan.layers)} layers but its graph has "
+            f"{len(g.units())} conv units (plan/graph mismatch)")
+    head = g.head()
+    if len(dense_ws) != len(head):
+        raise ValueError(
+            f"graph head has {len(head)} dense layers but params carry "
+            f"{len(dense_ws)} dense weights (zip would silently truncate)")
 
 
-def run_plan(plan: PipelinePlan, params, imgs, ccfg: CNNConfig = CNNConfig(), *,
+def run_plan(plan: PipelinePlan, params, imgs, ccfg=None, *,
              collect_occupancy: bool = False, n_valid=None):
     """Execute the planned layer sequence over a batch: (N,C,H,W) -> logits.
 
-    Each entry is one whole-batch op: the fused Pallas grid for sparse
-    stage-final layers, `conv2d` + ReLU (+ unfused pool) otherwise. Pallas
-    layers run at the plan's `block_c` — the block size the occupancy was
-    measured (and the sparse/dense decision made) at.
+    Each entry is one whole-batch op resolved through the registry: the fused
+    Pallas grid for sparse fused units, conv + ReLU (+ unfused pool)
+    otherwise. Pallas layers run at the plan's `block_c` — the block size the
+    occupancy was measured (and the sparse/dense decision made) at. `ccfg` is
+    only consulted for pre-IR plans that carry no graph.
 
     collect_occupancy=True additionally returns the per-layer observed
     channel-block occupancy of each layer's INPUT (a (n_layers,) array,
@@ -200,36 +244,18 @@ def run_plan(plan: PipelinePlan, params, imgs, ccfg: CNNConfig = CNNConfig(), *,
     `n_valid` (traced) masks the statistic to the first n_valid samples of a
     padded serving bucket.
     """
-    from repro.kernels.conv_pool.ops import fused_conv_pool
-    from repro.kernels.ecr_conv.ops import ecr_conv
-
     if imgs.ndim == 3:
         imgs = imgs[None]
-    validate_plan(plan, params, imgs)
-    p = ccfg.pool_size
+    validate_plan(plan, params, imgs, ccfg)
+    graph = _plan_graph(plan, ccfg)
+    conv_ws, dense_ws = graph_weights(params)
     x = imgs
     occs = []
-    flat_weights = [w for convs in params["stages"] for w in convs]
-    for lp, w in zip(plan.layers, flat_weights):
+    for lp, w in zip(plan.layers, conv_ws):
         if collect_occupancy:
             occs.append(occupancy_stat(x, plan.block_c, n_valid))
-        xp = _pad1(x)
-        if lp.kind == "conv_pool" and lp.impl in ("pecr", "pecr_pallas"):
-            if lp.impl == "pecr_pallas":
-                x = fused_conv_pool(xp, w, 1, p, block_c=plan.block_c)
-            else:
-                x = conv_pool(xp, w, 1, p, None, lp.impl)
-        else:
-            if lp.impl == "ecr_pallas":
-                x = ecr_conv(xp, w, block_c=plan.block_c)
-            else:
-                x = conv2d(xp, w, 1, lp.impl)
-            x = jnp.maximum(x, 0.0)
-            if lp.kind == "conv_pool":
-                x = _maxpool(x, p)
-    x = x.reshape(x.shape[0], -1)
-    x = jnp.maximum(x @ params["fc1"], 0.0)
-    logits = x @ params["fc2"]
+        x = run_unit(x, w, lp.to_unit(), lp.kind, lp.impl, plan.block_c)
+    logits = run_head(x, dense_ws, graph.head())
     if collect_occupancy:
         return logits, jnp.stack(occs)
     return logits

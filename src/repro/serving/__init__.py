@@ -1,9 +1,10 @@
 """Sparsity-aware serving engine over the pipeline planner (DESIGN.md §4).
 
-Turns the static `PipelinePlan` into a request-serving loop: the
-`MicroBatcher` collects single-image requests into deadline-bounded
-power-of-two buckets, the `PlanCache` compiles one ahead-of-time executable
-per (bucket, block_c, occupancy-signature) key, the `Engine` executes batches
+Turns the static `PipelinePlan` — over any `LayerGraph` network (VGG-19,
+LeNet, AlexNet, ...) — into a request-serving loop: the `MicroBatcher`
+collects single-image requests into deadline-bounded power-of-two buckets,
+the `PlanCache` compiles one ahead-of-time executable per (bucket, block_c,
+occupancy-signature, graph-signature) key, the `Engine` executes batches
 while tracking per-layer observed occupancy (EMA) and re-plans — optionally
 in the background — when it drifts out of the hysteresis band, and `autotune`
 searches (occ_threshold, block_c) offline, selecting by measured wall time

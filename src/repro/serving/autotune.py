@@ -26,7 +26,8 @@ from dataclasses import dataclass, field
 import jax
 import numpy as np
 
-from repro.configs.vgg19_sparse import CNNConfig
+from repro.graph import as_graph
+from repro.graph.registry import get_op
 from repro.pipeline.planner import PipelinePlan, plan_network, run_plan
 from repro.serving.plan_cache import plan_key
 
@@ -63,41 +64,44 @@ class AutotuneResult:
         return self.best.plan
 
 
-def plan_model_us(plan: PipelinePlan, params, ccfg: CNNConfig = CNNConfig(),
-                  batch: int = 1) -> float:
+def plan_model_us(plan: PipelinePlan, params, batch: int = 1) -> float:
     """Roofline-modeled execution time (us) of a plan at a given batch size,
-    summed from the kernels' op-level cost hooks plus the classifier GEMMs.
-    Dense layers are the occupancy=1.0 point of the same model, unfused pools
-    pay the intermediate round trip that PECR deletes (DESIGN.md §2.3)."""
-    from repro.kernels.conv_pool.ops import conv_pool_cost
-    from repro.kernels.ecr_conv.ops import ecr_conv_cost
+    summed from the registry's op-level cost hooks plus the classifier GEMMs.
+    Every layer's kernel shape / stride / pool comes from its own LayerPlan
+    (the IR nodes ride along in the plan; `to_unit` rejects pre-IR plans), so
+    LeNet's 5x5 convs and AlexNet's strided/overlapping layers model at
+    their real geometry. Dense layers are the occupancy=1.0 point of the
+    same model; a unit with an unfused pool is costed by the registry's
+    ("conv_pool", "unfused") hook — the conv plus the intermediate round
+    trip that PECR deletes (DESIGN.md §2.3)."""
+    from repro.graph.ir import graph_weights
 
-    k = ccfg.kernel_size
-    p = ccfg.pool_size
     flops = 0.0
     nbytes = 0.0
     for lp in plan.layers:
+        lp.to_unit()  # validate the specs are real before costing them
         c, h, w = lp.in_shape
         o = lp.out_shape[0]
-        occ = lp.occupancy if lp.impl != "dense" else 1.0
-        fused = lp.kind == "conv_pool" and lp.impl in ("pecr", "pecr_pallas")
-        if fused:
-            cost = conv_pool_cost(c, h + 2, w + 2, o, k, k, pool=p,
-                                  occupancy=occ, batch=batch)
+        k, pad, stride = lp.conv.k, lp.conv.pad, lp.conv.stride
+        op = get_op(lp.kind, lp.impl)
+        occ = lp.occupancy if op.sparse else 1.0
+        if lp.pool is not None:
+            # fused: the layer's own hook; unfused: the shared baseline hook
+            hook = op.cost if lp.kind == "conv_pool" else \
+                get_op("conv_pool", "unfused").cost
+            cost = hook(c, h + 2 * pad, w + 2 * pad, o, k, k, stride=stride,
+                        pool=lp.pool.p, occupancy=occ, batch=batch)
         else:
-            cost = ecr_conv_cost(c, h + 2, w + 2, o, k, k, occupancy=occ,
-                                 batch=batch)
-            if lp.kind == "conv_pool":  # unfused pool: round trip + pooled write
-                conv_out = cost["out_elems"] * 4.0
-                cost = {"flops": cost["flops"] + cost["out_elems"],
-                        "bytes": cost["bytes"] + conv_out + conv_out / (p * p)}
+            cost = op.cost(c, h + 2 * pad, w + 2 * pad, o, k, k, stride=stride,
+                           occupancy=occ, batch=batch)
         flops += cost["flops"]
         nbytes += cost["bytes"]
-    # classifier: flatten -> fc1 -> relu -> fc2
-    d_in, d_h = params["fc1"].shape
-    d_out = params["fc2"].shape[1]
-    flops += 2.0 * batch * (d_in * d_h + d_h * d_out)
-    nbytes += 4.0 * (d_in * d_h + d_h * d_out + batch * (d_in + d_h + d_out))
+    # classifier: flatten -> dense head GEMMs
+    _, dense_ws = graph_weights(params)
+    for w in dense_ws:
+        d_in, d_out = w.shape
+        flops += 2.0 * batch * d_in * d_out
+        nbytes += 4.0 * (d_in * d_out + batch * (d_in + d_out))
     return max(flops / PEAK_FLOPS, nbytes / HBM_BW) * 1e6
 
 
@@ -124,18 +128,19 @@ def _time_us(f, *args, iters: int = 3, warmup: int = 1) -> tuple:
     return med, float((max(ts) - min(ts)) / max(med, 1e-9)), [float(t) for t in ts]
 
 
-def _model_us(plan: PipelinePlan, params, ccfg, calib, runner) -> float:
-    if any(lp.impl.endswith("_pallas") for lp in plan.layers):
-        return plan_model_us(plan, params, ccfg, batch=calib.shape[0])
+def _model_us(plan: PipelinePlan, params, calib, runner) -> float:
+    if any(get_op(lp.kind, lp.impl).pallas for lp in plan.layers):
+        return plan_model_us(plan, params, batch=calib.shape[0])
     return hlo_model_us(runner, params, calib)
 
 
-def autotune(params, calib, ccfg: CNNConfig = CNNConfig(), *,
+def autotune(params, calib, graph=None, *,
              thresholds=(0.0, 0.5, 0.75, 0.9), block_cs=(0, 8),
              iters: int = 3, warmup: int = 1, noise_tol: float = 0.25,
              use_pallas: bool = True, mode: str = "auto") -> AutotuneResult:
     """Grid-search (occ_threshold, block_c); return the plan that serves the
-    calibration batch fastest.
+    calibration batch fastest. `graph` is a LayerGraph or legacy CNNConfig
+    (None = full VGG-19).
 
     mode="auto" selects by median wall time, unless the timing cannot
     separate the top two candidates — the winner's spread exceeds `noise_tol`,
@@ -144,6 +149,7 @@ def autotune(params, calib, ccfg: CNNConfig = CNNConfig(), *,
     mode="time" / mode="model" force one criterion (used by tests and by
     callers that know their clock quality).
     """
+    graph = as_graph(graph)
     if calib.ndim == 3:
         calib = calib[None]
     seen: dict = {}
@@ -151,13 +157,13 @@ def autotune(params, calib, ccfg: CNNConfig = CNNConfig(), *,
     cands: list = []
     for th in thresholds:
         for bc in block_cs:
-            plan = plan_network(params, calib, ccfg, occ_threshold=th,
+            plan = plan_network(params, calib, graph, occ_threshold=th,
                                 block_c=bc, use_pallas=use_pallas)
             sig = plan_key(calib.shape[0], plan)
             if sig in seen:  # same schedule == same executable: reuse timing
                 cands.append(Candidate(th, bc, plan, *seen[sig]))
                 continue
-            runners[sig] = _runner_for(plan, ccfg)
+            runners[sig] = _runner_for(plan)
             if mode == "model":  # ranking by model only: skip the timing runs
                 wall, spread, ts = float("inf"), 0.0, []
             else:
@@ -186,15 +192,15 @@ def autotune(params, calib, ccfg: CNNConfig = CNNConfig(), *,
         for c in cands:
             sig = plan_key(calib.shape[0], c.plan)
             if sig not in model_by_sig:
-                model_by_sig[sig] = _model_us(c.plan, params, ccfg, calib,
+                model_by_sig[sig] = _model_us(c.plan, params, calib,
                                               runners[sig])
             c.model_us = model_by_sig[sig]
     best = min(cands, key=lambda c: c.model_us) if used_model else by_time[0]
     return AutotuneResult(best=best, candidates=cands, used_model=used_model)
 
 
-def _runner_for(plan: PipelinePlan, ccfg: CNNConfig):
+def _runner_for(plan: PipelinePlan):
     def run(params, imgs):
-        return run_plan(plan, params, imgs, ccfg)
+        return run_plan(plan, params, imgs)
 
     return run

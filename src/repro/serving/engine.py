@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.vgg19_sparse import CNNConfig
+from repro.graph import as_graph
 from repro.pipeline.planner import PipelinePlan, plan_network, run_plan
 from repro.serving.batcher import MicroBatch, MicroBatcher, SimClock
 from repro.serving.plan_cache import PlanCache, plan_key
@@ -49,25 +49,27 @@ class ServedResult:
         return self.t_done - self.t_arrival
 
 
-def _make_runner(plan: PipelinePlan, ccfg: CNNConfig):
+def _make_runner(plan: PipelinePlan):
     """The whole-batch executor the cache compiles: logits + per-layer
-    observed occupancy over the first n_valid (real) samples."""
+    observed occupancy over the first n_valid (real) samples. The plan
+    carries its own LayerGraph, so the runner is model-agnostic."""
 
     def run(params, imgs, n_valid):
-        return run_plan(plan, params, imgs, ccfg, collect_occupancy=True,
+        return run_plan(plan, params, imgs, collect_occupancy=True,
                         n_valid=n_valid)
 
     return run
 
 
 class Engine:
-    """Sparsity-aware serving engine for the planned VGG-style conv stack.
+    """Sparsity-aware serving engine for any planned LayerGraph conv stack
+    (VGG-19, LeNet, AlexNet, ... — pass `graph=` or a legacy `CNNConfig`).
 
     Drive it with `submit()` + `poll()` (event loop), `drain()` (end of
     stream), or the synchronous convenience `serve(imgs)`.
     """
 
-    def __init__(self, params, ccfg: CNNConfig = CNNConfig(), *,
+    def __init__(self, params, ccfg=None, *, graph=None,
                  plan: PipelinePlan | None = None, calib=None,
                  occ_threshold: float = 0.75, block_c: int = 0,
                  use_pallas: bool = True, max_batch: int = 8,
@@ -76,13 +78,15 @@ class Engine:
                  ema_alpha: float = 0.25, replan_band: float = 0.15,
                  replan_cooldown: int = 2, replan_async: bool = False,
                  cache_entries: int = 32):
+        graph = plan.graph if plan is not None and plan.graph is not None \
+            else as_graph(graph if graph is not None else ccfg)
         if plan is None:
             if calib is None:
                 raise ValueError("Engine needs either a prebuilt plan= or calib= images to plan on")
-            plan = plan_network(params, calib, ccfg, occ_threshold=occ_threshold,
+            plan = plan_network(params, calib, graph, occ_threshold=occ_threshold,
                                 block_c=block_c, use_pallas=use_pallas)
         self.params = params
-        self.ccfg = ccfg
+        self.graph = graph
         self.plan = plan
         self.use_pallas = use_pallas
         self.clock = clock
@@ -180,13 +184,13 @@ class Engine:
 
     def _executable(self, bucket: int):
         key = plan_key(bucket, self.plan)
-        plan, ccfg, params = self.plan, self.ccfg, self.params
+        plan, params = self.plan, self.params
 
         def build():
             c, h, w = plan.layers[0].in_shape
             imgs_s = jax.ShapeDtypeStruct((bucket, c, h, w), jnp.float32)
             nv_s = jax.ShapeDtypeStruct((), jnp.int32)
-            return jax.jit(_make_runner(plan, ccfg)).lower(params, imgs_s, nv_s).compile()
+            return jax.jit(_make_runner(plan)).lower(params, imgs_s, nv_s).compile()
 
         return self.cache.get_or_compile(key, plan, build)
 
@@ -239,7 +243,7 @@ class Engine:
 
         def work():
             try:
-                new = plan_network(self.params, calib, self.ccfg,
+                new = plan_network(self.params, calib, self.graph,
                                    occ_threshold=plan.occ_threshold,
                                    block_c=plan.block_c, use_pallas=self.use_pallas)
             except Exception:

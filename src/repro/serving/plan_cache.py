@@ -4,9 +4,12 @@ Serving cannot afford a recompile per request: the whole point of bucketed
 batching is that the set of distinct programs is small and each compiles
 exactly once. The cache key is
 
-    (batch bucket, block_c, occupancy signature)
+    (batch bucket, block_c, occupancy signature, graph signature)
 
-where the occupancy signature is the tuple of per-layer impl decisions
+where the graph signature is the plan's `LayerGraph.signature()` — one engine
+(or one shared cache) can serve several networks (VGG-19 / LeNet / AlexNet)
+without two structurally different models ever colliding on a program — and
+the occupancy signature is the tuple of per-layer impl decisions
 ("dense" / "ecr_pallas" / "pecr_pallas" / ...). This IS the occupancy bucket
 that matters for compilation: the measured occupancies only reach the
 compiled program through which side of `occ_threshold` each layer fell, so
@@ -29,13 +32,16 @@ from dataclasses import dataclass
 class PlanKey:
     bucket: int  # padded batch size the executable was compiled for
     block_c: int  # the plan's channel-block size (0 = per-layer auto)
-    occ_sig: tuple  # per-layer impl decisions — the plan's occupancy bucket
+    occ_sig: tuple  # per-layer (kind, impl) decisions — the occupancy bucket
+    graph_sig: tuple = ()  # LayerGraph.signature() — the network's structure
 
 
 def plan_key(bucket: int, plan) -> PlanKey:
     """The cache key of executing `plan` at batch size `bucket`."""
+    graph = getattr(plan, "graph", None)
     return PlanKey(bucket=int(bucket), block_c=int(plan.block_c),
-                   occ_sig=tuple(lp.impl for lp in plan.layers))
+                   occ_sig=tuple((lp.kind, lp.impl) for lp in plan.layers),
+                   graph_sig=graph.signature() if graph is not None else ())
 
 
 class PlanCache:
