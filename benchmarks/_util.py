@@ -29,6 +29,36 @@ def time_fn(f, *args, iters: int = 5, warmup: int = 2) -> float:
     return float(np.median(ts) * 1e6)
 
 
+def serve_replay_point(engine, imgs, rate_rps: float):
+    """Warm a serving engine, drive one open-loop replay at `rate_rps`, and
+    return (results, point) — the throughput/latency/cache point dict the
+    serving sweeps share (benchmarks/serve_vgg19.py, serve_sharded.py add
+    their sweep-specific fields on top). The engine must be on a SimClock."""
+    from repro.serving import replay_stream
+
+    clock = engine.clock
+    warm_compiles = engine.warmup()
+    t0 = clock()
+    results = replay_stream(engine, imgs, rate_rps=rate_rps)
+    makespan = max(clock() - t0, 1e-9)
+    lat_ms = np.array(sorted(r.latency_s for r in results)) * 1e3
+    stats = engine.stats()
+    point = {
+        "rate_rps": rate_rps,
+        "throughput_rps": len(results) / makespan,
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p95_ms": float(np.percentile(lat_ms, 95)),
+        "mean_ms": float(lat_ms.mean()),
+        "batches": stats["batches"],
+        "mean_fill": round(stats["mean_fill"], 3),
+        "warm_compiles": warm_compiles,
+        "stream_compiles": stats["compiles"] - warm_compiles,
+        "cache_hits": stats["hits"],
+        "replans": stats["replans"],
+    }
+    return results, point
+
+
 def git_sha() -> str:
     """Current repo HEAD (short), "unknown" outside a git checkout — stamped
     into every BENCH_*.json so the perf trajectory is attributable."""

@@ -33,6 +33,7 @@ def main() -> None:
         kernels_micro,
         model_zoo,
         roofline,
+        serve_sharded,
         serve_vgg19,
         table3_single_layer,
     )
@@ -49,6 +50,10 @@ def main() -> None:
         ("roofline", roofline),
         ("zoo", model_zoo),
         ("serve", serve_vgg19),
+        # jax is initialized by the imports above, so the sharded sweep sees
+        # however many devices the operator's XLA_FLAGS exposed (1 by
+        # default — the full 1/2/4 sweep runs in the dedicated CI job)
+        ("serve_sharded", serve_sharded),
     ]
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("only", nargs="?", default=None,
@@ -61,8 +66,9 @@ def main() -> None:
     for name, mod in modules:
         if args.only and name != args.only:
             continue
-        # serve_vgg19 writes its own BENCH json; point it at the same dir
-        kwargs = {"json_dir": args.json} if (args.json and name == "serve") else {}
+        # the serving benchmarks write their own BENCH json; same dir
+        own_json = name in ("serve", "serve_sharded")
+        kwargs = {"json_dir": args.json} if (args.json and own_json) else {}
         t0 = time.time()
         if args.json is None:
             mod.main(**kwargs)
@@ -73,7 +79,7 @@ def main() -> None:
                     mod.main(**kwargs)
             finally:
                 print(buf.getvalue(), end="")  # keep partial rows on a crash
-            if name != "serve":  # serve_vgg19 already wrote its richer json
+            if not own_json:  # serving benchmarks already wrote richer json
                 _util.write_bench_json(name, _util.parse_csv_rows(buf.getvalue()),
                                        args.json)
         print(f"_meta/{name}_wall_s,{(time.time()-t0)*1e6:.0f},benchmark module wall time")

@@ -20,13 +20,12 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from benchmarks._util import write_bench_json
+from benchmarks._util import serve_replay_point, write_bench_json
 from repro.configs.vgg19_sparse import CNNConfig
 from repro.launch.serve_cnn import synth_requests
 from repro.models.cnn import init_cnn, shift_dead_channels
-from repro.serving import Engine, SimClock, replay_stream
+from repro.serving import Engine, SimClock
 
 
 def sweep(rates, n_requests: int, ccfg: CNNConfig, *, max_batch: int = 8,
@@ -41,30 +40,11 @@ def sweep(rates, n_requests: int, ccfg: CNNConfig, *, max_batch: int = 8,
     rows = []
     points = []
     for rate in rates:
-        clock = SimClock()
         engine = Engine(params, ccfg, calib=calib, occ_threshold=occ_threshold,
                         block_c=block_c, max_batch=max_batch,
-                        deadline_s=deadline_ms * 1e-3, clock=clock)
-        warm_compiles = engine.warmup()
-        t0 = clock()
-        results = replay_stream(engine, synth_requests(ccfg, n_requests, seed=seed + 2),
-                                rate_rps=rate)
-        makespan = max(clock() - t0, 1e-9)
-        lat_ms = np.array(sorted(r.latency_s for r in results)) * 1e3
-        stats = engine.stats()
-        point = {
-            "rate_rps": rate,
-            "throughput_rps": len(results) / makespan,
-            "p50_ms": float(np.percentile(lat_ms, 50)),
-            "p95_ms": float(np.percentile(lat_ms, 95)),
-            "mean_ms": float(lat_ms.mean()),
-            "batches": stats["batches"],
-            "mean_fill": round(stats["mean_fill"], 3),
-            "warm_compiles": warm_compiles,
-            "stream_compiles": stats["compiles"] - warm_compiles,
-            "cache_hits": stats["hits"],
-            "replans": stats["replans"],
-        }
+                        deadline_s=deadline_ms * 1e-3, clock=SimClock())
+        _, point = serve_replay_point(
+            engine, synth_requests(ccfg, n_requests, seed=seed + 2), rate)
         points.append(point)
         rows.append({
             "name": f"serve/rate{rate:g}",

@@ -7,6 +7,13 @@ serving engine's compiled runners are all thin wrappers over `run_units` +
 concerns (padding, unfused ReLU/pool around a plain conv, flatten, the dense
 head) live here; impl selection lives in `repro.graph.registry`; numerical
 kernels live in core/ and kernels/.
+
+The executor is deliberately mesh-OBLIVIOUS: every op is per-sample along
+the batch dim, so under the sharded serving path (DESIGN.md §6) this exact
+code runs unchanged inside a shard_map body on each device's batch slice —
+the per-sample (ids, cnt) schedules it dispatches to are built shard-local,
+and the only collective (the cross-shard occupancy aggregation) lives in
+`repro.pipeline.planner.run_plan`, never here.
 """
 from __future__ import annotations
 

@@ -11,6 +11,9 @@ Other networks:
     PYTHONPATH=src python -m repro.launch.serve_cnn --model alexnet
 Autotuned plan:
     PYTHONPATH=src python -m repro.launch.serve_cnn --autotune
+Data-parallel over 4 virtual CPU devices (DESIGN.md §6):
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python -m repro.launch.serve_cnn --devices 4
 """
 from __future__ import annotations
 
@@ -24,7 +27,8 @@ import numpy as np
 from repro.configs.vgg19_sparse import CNNConfig, vgg19_graph
 from repro.graph import LayerGraph, init_graph
 from repro.models.cnn import shift_dead_channels
-from repro.serving import Engine, SimClock, autotune, replay_stream
+from repro.parallel import data_mesh
+from repro.serving import Engine, SimClock, auto_mesh, autotune, replay_stream
 
 log = logging.getLogger("repro.serve_cnn")
 
@@ -70,14 +74,19 @@ def serve_cnn(*, model: str = "vgg19", full: bool = False,
               max_batch: int = 8, deadline_ms: float = 10.0,
               occ_threshold: float = 0.75, block_c: int = 8,
               do_autotune: bool = False, replan_band: float = 0.15,
-              seed: int = 0) -> dict:
+              devices: int = 0, seed: int = 0) -> dict:
     graph = serving_graph(model, full)
     params = shift_dead_channels(init_graph(jax.random.PRNGKey(seed), graph))
-    calib = jnp.stack(synth_requests(graph, 2, seed=seed + 1))
+    # --devices 0 degrades like the Engine's auto policy (largest local
+    # prefix dividing max_batch); an explicit count is honored or raises
+    mesh = data_mesh(devices) if devices else auto_mesh(max_batch)
+    # calib batch must divide the device count so autotune can time the
+    # SHARDED executor the engine will actually run
+    calib = jnp.stack(synth_requests(graph, max(2, mesh.size), seed=seed + 1))
     plan = None
     if do_autotune:
         result = autotune(params, calib, graph, thresholds=(0.5, 0.75, 0.9),
-                          block_cs=(0, 8))
+                          block_cs=(0, 8), mesh=mesh)
         plan = result.plan
         log.info("autotune picked occ_threshold=%.2f block_c=%d (model fallback: %s)",
                  result.best.occ_threshold, result.best.block_c, result.used_model)
@@ -85,12 +94,12 @@ def serve_cnn(*, model: str = "vgg19", full: bool = False,
     engine = Engine(params, graph=graph, plan=plan, calib=calib,
                     occ_threshold=occ_threshold, block_c=block_c,
                     max_batch=max_batch, deadline_s=deadline_ms * 1e-3,
-                    clock=clock, replan_band=replan_band)
+                    clock=clock, replan_band=replan_band, mesh=mesh)
     log.info("%s plan: %s", graph.name, " ".join(
         f"conv{lp.index + 1}={lp.impl}@{lp.occupancy:.2f}" for lp in engine.plan.layers))
     compiled = engine.warmup()
-    log.info("warmed %d bucket programs (buckets=%s)", compiled,
-             engine.batcher.exec_buckets())
+    log.info("warmed %d bucket programs (buckets=%s, devices=%d)", compiled,
+             engine.batcher.exec_buckets(), engine.n_devices)
 
     t_start = clock()
     results = replay_stream(engine, synth_requests(graph, n_requests, seed=seed + 2),
@@ -100,6 +109,7 @@ def serve_cnn(*, model: str = "vgg19", full: bool = False,
     stats = engine.stats()
     summary = {
         "model": graph.name,
+        "devices": engine.n_devices,
         "requests": len(results),
         "rate_rps": rate,
         "throughput_rps": len(results) / max(makespan, 1e-9),
@@ -134,13 +144,20 @@ def main():
                          "for the reduced net's 16 channels, so 8 by default)")
     ap.add_argument("--replan-band", type=float, default=0.15)
     ap.add_argument("--autotune", action="store_true")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="data-parallel device count (0 = auto: the largest "
+                         "local count dividing max-batch; an explicit count "
+                         "must divide max-batch; run under "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                         "for virtual CPU devices)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve_cnn(model=args.model, full=args.full, n_requests=args.n_requests,
               rate=args.rate, max_batch=args.max_batch,
               deadline_ms=args.deadline_ms, occ_threshold=args.occ_threshold,
               block_c=args.block_c, do_autotune=args.autotune,
-              replan_band=args.replan_band, seed=args.seed)
+              replan_band=args.replan_band, devices=args.devices,
+              seed=args.seed)
 
 
 if __name__ == "__main__":

@@ -1,3 +1,11 @@
-from repro.parallel.api import axis_rules, current_mesh, logical_spec, shard, sharding_for
+from repro.parallel.api import (
+    axis_rules,
+    current_mesh,
+    data_mesh,
+    logical_spec,
+    shard,
+    sharding_for,
+)
 
-__all__ = ["axis_rules", "current_mesh", "logical_spec", "shard", "sharding_for"]
+__all__ = ["axis_rules", "current_mesh", "data_mesh", "logical_spec", "shard",
+           "sharding_for"]

@@ -23,6 +23,7 @@ from contextlib import contextmanager
 from typing import Optional, Sequence
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # fsdp: parameter dims that shard over the data axes (ZeRO-3); the "pod" axis
@@ -50,6 +51,19 @@ DEFAULT_RULES: dict[str, list[tuple[str, ...]]] = {
     "layers": [],
     "none": [],
 }
+
+
+def data_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D mesh over the first `n_devices` local devices on the "data" axis
+    (None = all of them) — the serving engine's data-parallel layout
+    (DESIGN.md §6). A 1-device mesh is valid and degenerates to replication
+    everywhere, so callers can treat device count as just another knob."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(
+            f"data_mesh({n_devices}): this host exposes {len(devs)} device(s)")
+    return Mesh(np.array(devs[:n]), ("data",))
 
 
 def is_axes_leaf(x) -> bool:

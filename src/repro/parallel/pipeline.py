@@ -8,8 +8,9 @@ equivalent backward wave automatically).
 
 This is the PP building block offered by the framework (RunConfig.
 pipeline_stages); the production default for the multi-pod mesh is FSDP over
-"pod" (DESIGN.md §6), with PP as the alternative when cross-pod bandwidth is
-the binding constraint — activations/S vs gradients/step is the trade.
+"pod", with PP as the alternative when cross-pod bandwidth is the binding
+constraint — activations/S vs gradients/step is the trade. (The CNN serving
+path uses the simpler 1-D "data" mesh of `api.data_mesh`; see DESIGN.md §6.)
 """
 from __future__ import annotations
 

@@ -17,6 +17,7 @@ from repro.pipeline.planner import (
     occupancy_stat,
     plan_network,
     run_plan,
+    run_plan_sharded,
     validate_plan,
 )
 
@@ -27,5 +28,6 @@ __all__ = [
     "occupancy_stat",
     "plan_network",
     "run_plan",
+    "run_plan_sharded",
     "validate_plan",
 ]

@@ -229,7 +229,8 @@ def validate_plan(plan: PipelinePlan, params, imgs, graph=None) -> None:
 
 
 def run_plan(plan: PipelinePlan, params, imgs, ccfg=None, *,
-             collect_occupancy: bool = False, n_valid=None):
+             collect_occupancy: bool = False, n_valid=None,
+             axis_name: str | None = None):
     """Execute the planned layer sequence over a batch: (N,C,H,W) -> logits.
 
     Each entry is one whole-batch op resolved through the registry: the fused
@@ -243,6 +244,13 @@ def run_plan(plan: PipelinePlan, params, imgs, ccfg=None, *,
     jit-traceable) — the signal the serving engine's drift detector consumes.
     `n_valid` (traced) masks the statistic to the first n_valid samples of a
     padded serving bucket.
+
+    `axis_name` marks a call from inside a shard_map body (see
+    `run_plan_sharded`): the per-layer math is per-sample and needs no
+    collective, but the occupancy statistic is then shard-local, so it is
+    aggregated across the mesh axis — weighted by each shard's valid-sample
+    count when `n_valid` is given (a ragged bucket's tail shard holds fewer
+    real samples), which reduces to a plain `lax.pmean` for full buckets.
     """
     if imgs.ndim == 3:
         imgs = imgs[None]
@@ -257,5 +265,83 @@ def run_plan(plan: PipelinePlan, params, imgs, ccfg=None, *,
         x = run_unit(x, w, lp.to_unit(), lp.kind, lp.impl, plan.block_c)
     logits = run_head(x, dense_ws, graph.head())
     if collect_occupancy:
-        return logits, jnp.stack(occs)
+        occs = jnp.stack(occs)
+        if axis_name is not None:
+            import jax
+
+            if n_valid is None:
+                occs = jax.lax.pmean(occs, axis_name)
+            else:
+                wt = jnp.clip(jnp.asarray(n_valid, jnp.float32), 0.0,
+                              float(imgs.shape[0]))
+                occs = jax.lax.psum(occs * wt, axis_name) / jnp.maximum(
+                    jax.lax.psum(wt, axis_name), 1.0)
+        return logits, occs
     return logits
+
+
+def run_plan_sharded(plan: PipelinePlan, params, imgs, mesh, *,
+                     collect_occupancy: bool = False, n_valid=None):
+    """`run_plan` under `shard_map` over a 1-D "data" mesh (DESIGN.md §6).
+
+    The batch dim is sharded across the mesh's data axis; params are
+    replicated; each shard executes its slice with DEVICE-LOCAL per-sample
+    (ids, cnt) schedules — sparsity skipping never needs a collective, so the
+    only cross-device traffic is the occupancy aggregation above. `n_valid`
+    is the GLOBAL count of real (non-pad) samples; each shard derives its
+    local count from its `lax.axis_index` (pad samples sit at the tail of the
+    batch, so they land on the highest-index shards).
+
+    Exactness: shard-local logits are bit-identical to the single-device
+    `run_plan` whenever every shard's local batch is >= 2 (the same XLA
+    M=1-GEMV caveat as `MicroBatcher.min_bucket`) and co-batched samples
+    share a live-channel union (all-zero pads never perturb it) — the serving
+    engine's device-aligned buckets enforce both. `mesh=None` (or a 1-device
+    mesh) falls back to plain `run_plan`, bit-identical to today.
+
+    The batch must divide the data-axis size; the batcher's device-aligned
+    buckets guarantee it, and anything else raises here rather than silently
+    replicating.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if imgs.ndim == 3:
+        imgs = imgs[None]
+    if mesh is None or mesh.size == 1:
+        return run_plan(plan, params, imgs,
+                        collect_occupancy=collect_occupancy, n_valid=n_valid)
+    if "data" not in mesh.axis_names:
+        raise ValueError(
+            f"run_plan_sharded needs a mesh with a 'data' axis, got axes "
+            f"{tuple(mesh.axis_names)}")
+    n_dev = int(mesh.shape["data"])
+    n = int(imgs.shape[0])
+    if n % n_dev:
+        raise ValueError(
+            f"batch of {n} does not divide the {n_dev}-device data axis — "
+            "pad to a device-aligned bucket (MicroBatcher(align=n_dev))")
+    validate_plan(plan, params, imgs)  # fail eagerly, outside the trace
+    local_n = n // n_dev
+
+    if collect_occupancy:
+        import jax
+
+        nv = jnp.asarray(n if n_valid is None else n_valid, jnp.int32)
+
+        def mapped(params, imgs_local, nv):
+            shard_i = jax.lax.axis_index("data")
+            nv_local = jnp.clip(nv - shard_i * local_n, 0, local_n)
+            return run_plan(plan, params, imgs_local, collect_occupancy=True,
+                            n_valid=nv_local, axis_name="data")
+
+        fn = shard_map(mapped, mesh=mesh, in_specs=(P(), P("data"), P()),
+                       out_specs=(P("data"), P()), check_rep=False)
+        return fn(params, imgs, nv)
+
+    def mapped(params, imgs_local):
+        return run_plan(plan, params, imgs_local)
+
+    fn = shard_map(mapped, mesh=mesh, in_specs=(P(), P("data")),
+                   out_specs=P("data"), check_rep=False)
+    return fn(params, imgs)

@@ -8,10 +8,14 @@ occupancy-signature, graph-signature) key, the `Engine` executes batches
 while tracking per-layer observed occupancy (EMA) and re-plans — optionally
 in the background — when it drifts out of the hysteresis band, and `autotune`
 searches (occ_threshold, block_c) offline, selecting by measured wall time
-with a cost-model fallback for noisy clocks.
+with a cost-model fallback for noisy clocks. With more than one local device
+the engine serves data-parallel over a 1-D "data" mesh (shard_map, device-
+aligned buckets, cross-shard occupancy aggregation — DESIGN.md §6).
 
-Entry points: `launch/serve_cnn.py` (CLI), `benchmarks/serve_vgg19.py`
-(request-rate sweep), `examples/vgg19_server.py` (walkthrough).
+Entry points: `launch/serve_cnn.py` (CLI, `--devices`),
+`benchmarks/serve_vgg19.py` (request-rate sweep),
+`benchmarks/serve_sharded.py` (device-count x rate sweep),
+`examples/vgg19_server.py` (walkthrough).
 """
 from repro.serving.autotune import (
     AutotuneResult,
@@ -27,7 +31,7 @@ from repro.serving.batcher import (
     SimClock,
     bucket_sizes,
 )
-from repro.serving.engine import Engine, ServedResult, replay_stream
+from repro.serving.engine import Engine, ServedResult, auto_mesh, replay_stream
 from repro.serving.plan_cache import PlanCache, PlanKey, plan_key
 
 __all__ = [
@@ -41,6 +45,7 @@ __all__ = [
     "Request",
     "ServedResult",
     "SimClock",
+    "auto_mesh",
     "autotune",
     "bucket_sizes",
     "hlo_model_us",

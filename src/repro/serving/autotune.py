@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.graph import as_graph
 from repro.graph.registry import get_op
-from repro.pipeline.planner import PipelinePlan, plan_network, run_plan
+from repro.pipeline.planner import PipelinePlan, plan_network, run_plan, run_plan_sharded
 from repro.serving.plan_cache import plan_key
 
 # v5e-class roofline constants (same as benchmarks/_util and the dry-run)
@@ -137,7 +137,8 @@ def _model_us(plan: PipelinePlan, params, calib, runner) -> float:
 def autotune(params, calib, graph=None, *,
              thresholds=(0.0, 0.5, 0.75, 0.9), block_cs=(0, 8),
              iters: int = 3, warmup: int = 1, noise_tol: float = 0.25,
-             use_pallas: bool = True, mode: str = "auto") -> AutotuneResult:
+             use_pallas: bool = True, mode: str = "auto",
+             mesh=None) -> AutotuneResult:
     """Grid-search (occ_threshold, block_c); return the plan that serves the
     calibration batch fastest. `graph` is a LayerGraph or legacy CNNConfig
     (None = full VGG-19).
@@ -148,10 +149,18 @@ def autotune(params, calib, graph=None, *,
     the ranking falls back to the cost model (see module docstring).
     mode="time" / mode="model" force one criterion (used by tests and by
     callers that know their clock quality).
+
+    `mesh` (a 1-D "data" mesh, DESIGN.md §6) times each candidate through the
+    SHARDED executor the serving engine will actually run — the calibration
+    batch must divide the device count. The cost-model fallback stays
+    per-device (the roofline constants describe one chip, and the collective
+    traffic is identical across candidates, so it cancels in the ranking).
     """
     graph = as_graph(graph)
     if calib.ndim == 3:
         calib = calib[None]
+    if mesh is not None and mesh.size == 1:
+        mesh = None
     seen: dict = {}
     runners: dict = {}
     cands: list = []
@@ -163,11 +172,12 @@ def autotune(params, calib, graph=None, *,
             if sig in seen:  # same schedule == same executable: reuse timing
                 cands.append(Candidate(th, bc, plan, *seen[sig]))
                 continue
-            runners[sig] = _runner_for(plan)
+            runners[sig] = _runner_for(plan)  # unsharded: the model fallback's HLO view
             if mode == "model":  # ranking by model only: skip the timing runs
                 wall, spread, ts = float("inf"), 0.0, []
             else:
-                wall, spread, ts = _time_us(jax.jit(runners[sig]), params, calib,
+                wall, spread, ts = _time_us(jax.jit(_runner_for(plan, mesh)),
+                                            params, calib,
                                             iters=iters, warmup=warmup)
             seen[sig] = (wall, spread, float("inf"), ts)
             cands.append(Candidate(th, bc, plan, wall, spread, float("inf"), ts))
@@ -199,8 +209,10 @@ def autotune(params, calib, graph=None, *,
     return AutotuneResult(best=best, candidates=cands, used_model=used_model)
 
 
-def _runner_for(plan: PipelinePlan):
+def _runner_for(plan: PipelinePlan, mesh=None):
     def run(params, imgs):
-        return run_plan(plan, params, imgs)
+        if mesh is None:
+            return run_plan(plan, params, imgs)
+        return run_plan_sharded(plan, params, imgs, mesh)
 
     return run

@@ -5,7 +5,8 @@ off when a whole batch flows through each layer as one op (DESIGN.md §2.4:
 kernel-tensor reuse amortizes by 1/N). The batcher bridges the two: requests
 queue until either a full bucket of `max_batch` is waiting or the OLDEST
 request has been queued for `deadline_s` — then a batch is formed at the
-smallest power-of-two bucket that fits, and the engine pads the ragged tail
+smallest executable bucket that fits (powers of two plus the `max_batch` cap
+itself, filtered by the device-alignment rule below), and the engine pads the ragged tail
 with all-zero images (which the per-sample (ids, cnt) schedules skip entirely:
 a pad sample costs 0 MACs in the sparse layers).
 
@@ -44,14 +45,19 @@ class SimClock:
 
 
 def bucket_sizes(max_batch: int) -> tuple:
-    """Powers of two up to max_batch: the bucket set every batch pads into.
+    """Powers of two up to max_batch, plus max_batch itself when it is not a
+    power of two (the requested cap is HONORED, never silently clamped —
+    bucket_sizes(6) == (1, 2, 4, 6)): the bucket set every batch pads into.
     One jitted program per bucket keeps the compile count logarithmic in
-    max_batch instead of linear in observed batch sizes."""
+    max_batch instead of linear in observed batch sizes; a non-power-of-two
+    cap costs exactly one extra program."""
     if max_batch < 1:
         raise ValueError(f"max_batch must be >= 1, got {max_batch}")
     sizes = [1]
     while sizes[-1] * 2 <= max_batch:
         sizes.append(sizes[-1] * 2)
+    if sizes[-1] != max_batch:
+        sizes.append(max_batch)
     return tuple(sizes)
 
 
@@ -84,24 +90,48 @@ class MicroBatch:
 
 @dataclass
 class MicroBatcher:
-    """`min_bucket` floors the EXECUTED batch size (default 2): XLA's M=1
-    GEMV accumulates the classifier reduction in a different order than the
-    GEMM used at M>=2, so padding lone requests up to a 2-bucket keeps every
-    request's logits bit-identical to the whole-batch `run_plan` reference
-    regardless of how the stream happened to be chopped into batches — and
-    the pad sample is skipped by the sparse layers' per-sample schedules."""
+    """`min_bucket` floors the PER-DEVICE executed batch size (default 2):
+    XLA's M=1 GEMV accumulates the classifier reduction in a different order
+    than the GEMM used at M>=2, so padding lone requests up to a 2-bucket
+    keeps every request's logits bit-identical to the whole-batch `run_plan`
+    reference regardless of how the stream happened to be chopped into
+    batches — and the pad sample is skipped by the sparse layers' per-sample
+    schedules.
+
+    `align` is the sharded-serving knob (DESIGN.md §6): with a data-parallel
+    mesh of N devices the engine sets align=N, and every EXECUTED bucket is a
+    multiple of align whose per-device slice is >= min_bucket — each shard
+    gets an equal, >=2-sample slice (the bit-exactness floor applies on every
+    device), and the extra pad samples stay free under the per-sample
+    schedules. align=1 (the default) is exactly the unsharded behavior."""
 
     max_batch: int = 8
     deadline_s: float = 0.010
     clock: object = time.monotonic
     min_bucket: int = 2
+    align: int = 1
     _q: deque = field(default_factory=deque, init=False, repr=False)
     _next_id: int = field(default=0, init=False, repr=False)
 
     def __post_init__(self):
+        if self.align < 1:
+            raise ValueError(f"align must be >= 1, got {self.align}")
+        if self.max_batch % self.align:
+            raise ValueError(
+                f"max_batch={self.max_batch} must be a multiple of "
+                f"align={self.align} (one equal slice per device)")
         self.buckets = bucket_sizes(self.max_batch)
-        self.max_batch = self.buckets[-1]  # clamp to the largest power of two
-        self.min_bucket = min(self.min_bucket, self.max_batch)
+        if self.align > 1 and self.max_batch // self.align < self.min_bucket:
+            # silently clamping here would hand every shard an M=1 slice —
+            # exactly the GEMV reduction-order case min_bucket exists to
+            # prevent — and quietly void the bit-exactness contract
+            raise ValueError(
+                f"max_batch={self.max_batch} over align={self.align} devices "
+                f"gives each shard {self.max_batch // self.align} sample(s), "
+                f"below the min_bucket={self.min_bucket} bit-exactness floor; "
+                "pass min_bucket=1 to accept M=1 shards or use fewer devices")
+        # unsharded legacy clamp: max_batch=1 callers explicitly want singletons
+        self.min_bucket = min(self.min_bucket, max(1, self.max_batch // self.align))
 
     def submit(self, img, now: float | None = None) -> int:
         """Queue one image; returns its request id (submission order)."""
@@ -121,15 +151,18 @@ class MicroBatcher:
         return self._q[0].t_arrival + self.deadline_s
 
     def exec_buckets(self) -> tuple:
-        """The bucket sizes batches actually execute at (>= min_bucket) —
-        the set the engine pre-compiles on warmup."""
-        return tuple(b for b in self.buckets if b >= self.min_bucket)
+        """The bucket sizes batches actually execute at — multiples of
+        `align` whose per-device slice is >= min_bucket — the set the engine
+        pre-compiles on warmup. Non-empty by construction (max_batch always
+        qualifies)."""
+        return tuple(b for b in self.buckets
+                     if b % self.align == 0 and b // self.align >= self.min_bucket)
 
     def bucket_for(self, n: int) -> int:
-        """Smallest bucket >= max(n, min_bucket) (n is capped at max_batch
-        by the callers)."""
-        for b in self.buckets:
-            if b >= max(n, self.min_bucket):
+        """Smallest executable bucket >= n (n is capped at max_batch by the
+        callers)."""
+        for b in self.exec_buckets():
+            if b >= n:
                 return b
         return self.max_batch
 

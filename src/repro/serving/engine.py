@@ -12,7 +12,12 @@
   `n_valid` mask) and folds it into an EMA; when the EMA drifts out of the
   hysteresis band around the occupancies the current plan was calibrated at,
   the engine re-plans on the most recent real batch — optionally in a
-  background thread — and swaps the new plan in atomically between batches.
+  background thread — and swaps the new plan in atomically between batches;
+- with more than one local device (or an explicit `mesh=`), execution is
+  data-parallel: the bucket's batch dim shards over a 1-D "data" mesh under
+  shard_map, per-sample (ids, cnt) schedules stay device-local, and the
+  occupancy statistic is aggregated across shards so the EMA/re-plan
+  hysteresis reacts to global traffic (DESIGN.md §6).
 
 Exactness contract: a request's logits are bit-identical to `run_plan` on the
 same image(s) whenever the co-batched samples share a live-channel union (the
@@ -30,7 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graph import as_graph
-from repro.pipeline.planner import PipelinePlan, plan_network, run_plan
+from repro.parallel.api import data_mesh, sharding_for
+from repro.pipeline.planner import PipelinePlan, plan_network, run_plan, run_plan_sharded
 from repro.serving.batcher import MicroBatch, MicroBatcher, SimClock
 from repro.serving.plan_cache import PlanCache, plan_key
 
@@ -49,14 +55,34 @@ class ServedResult:
         return self.t_done - self.t_arrival
 
 
-def _make_runner(plan: PipelinePlan):
+def auto_mesh(max_batch: int = 8, min_bucket: int = 2):
+    """The engine's mesh="auto" policy: a 1-D "data" mesh over the LARGEST
+    local-device prefix whose size divides `max_batch` AND leaves every
+    shard at least `min_bucket` samples per full bucket — the two
+    constraints the batcher's device-aligned buckets enforce (an M=1 shard
+    slice would void the bit-exactness contract, see MicroBatcher). Never
+    raises for lack of devices: an awkward host degrades to fewer devices
+    (3 devices, max_batch=8 -> 2; 8 devices, max_batch=8 -> 4) instead of
+    refusing to serve, and 1 device is always acceptable."""
+    n_avail = len(jax.devices())
+    fits = [d for d in range(1, n_avail + 1)
+            if max_batch % d == 0 and max_batch // d >= min_bucket]
+    return data_mesh(max(fits) if fits else 1)
+
+
+def _make_runner(plan: PipelinePlan, mesh=None):
     """The whole-batch executor the cache compiles: logits + per-layer
     observed occupancy over the first n_valid (real) samples. The plan
-    carries its own LayerGraph, so the runner is model-agnostic."""
+    carries its own LayerGraph, so the runner is model-agnostic; with a
+    mesh it runs under shard_map (batch sharded over "data", occupancy
+    aggregated across shards — DESIGN.md §6)."""
 
     def run(params, imgs, n_valid):
-        return run_plan(plan, params, imgs, collect_occupancy=True,
-                        n_valid=n_valid)
+        if mesh is None:
+            return run_plan(plan, params, imgs, collect_occupancy=True,
+                            n_valid=n_valid)
+        return run_plan_sharded(plan, params, imgs, mesh,
+                                collect_occupancy=True, n_valid=n_valid)
 
     return run
 
@@ -67,6 +93,19 @@ class Engine:
 
     Drive it with `submit()` + `poll()` (event loop), `drain()` (end of
     stream), or the synchronous convenience `serve(imgs)`.
+
+    `mesh` selects the data-parallel layout (DESIGN.md §6): "auto" (default)
+    spans the largest local-device prefix whose size divides max_batch (all
+    devices on a well-shaped host, fewer on an awkward one — never a
+    construction failure), an explicit 1-D "data" mesh pins the device
+    count (and raises when max_batch is not a multiple of it), and None
+    forces single-device execution. On a 1-device host every
+    choice degenerates to the exact pre-mesh behavior. With N > 1 devices the
+    batcher's buckets are N-aligned (each shard takes an equal slice, local
+    slices keep the min_bucket floor so logits stay bit-exact), the plan
+    cache keys gain the mesh shape, and the occupancy EMA consumes the
+    cross-shard aggregated statistic — the drift detector sees GLOBAL
+    traffic, not one shard's slice of it.
     """
 
     def __init__(self, params, ccfg=None, *, graph=None,
@@ -74,7 +113,7 @@ class Engine:
                  occ_threshold: float = 0.75, block_c: int = 0,
                  use_pallas: bool = True, max_batch: int = 8,
                  min_bucket: int = 2, deadline_s: float = 0.010,
-                 clock=time.monotonic,
+                 clock=time.monotonic, mesh="auto",
                  ema_alpha: float = 0.25, replan_band: float = 0.15,
                  replan_cooldown: int = 2, replan_async: bool = False,
                  cache_entries: int = 32):
@@ -85,13 +124,29 @@ class Engine:
                 raise ValueError("Engine needs either a prebuilt plan= or calib= images to plan on")
             plan = plan_network(params, calib, graph, occ_threshold=occ_threshold,
                                 block_c=block_c, use_pallas=use_pallas)
+        # mesh="auto": 1-D data mesh over the largest local-device prefix
+        # dividing max_batch (all devices when they divide; fewer on awkward
+        # hosts rather than refusing to construct); a 1-device mesh (every
+        # single-device host) normalizes to None, so the unsharded path —
+        # and its cache keys — are bit-identical to pre-mesh engines. An
+        # EXPLICIT mesh is never shrunk: a mismatch with max_batch raises.
+        if mesh == "auto":
+            mesh = auto_mesh(max_batch, min_bucket)
+        if mesh is not None and mesh.size == 1:
+            mesh = None
+        if mesh is not None and "data" not in mesh.axis_names:
+            raise ValueError(f"Engine needs a mesh with a 'data' axis, got "
+                             f"{tuple(mesh.axis_names)}")
+        self.mesh = mesh
+        self.n_devices = int(mesh.shape["data"]) if mesh is not None else 1
         self.params = params
         self.graph = graph
         self.plan = plan
         self.use_pallas = use_pallas
         self.clock = clock
         self.batcher = MicroBatcher(max_batch=max_batch, deadline_s=deadline_s,
-                                    clock=clock, min_bucket=min_bucket)
+                                    clock=clock, min_bucket=min_bucket,
+                                    align=self.n_devices)
         self.cache = PlanCache(max_entries=cache_entries)
         self.ema_alpha = ema_alpha
         self.replan_band = replan_band
@@ -129,13 +184,20 @@ class Engine:
         return self.batcher.next_deadline()
 
     def poll(self) -> list:
-        """Adopt any finished re-plan, then run at most one due batch.
-        Returns the completed `ServedResult`s ([] when nothing was due)."""
-        self._adopt_pending_plan()
-        batch = self.batcher.ready()
-        if batch is None:
-            return []
-        return self._run_batch(batch)
+        """Adopt any finished re-plan, then run EVERY due batch — a burst of
+        >= 2·max_batch requests leaves several full buckets queued, and
+        serving only the first would strand the rest until the next deadline
+        poll, breaking the batcher's wait bound under load. Each executed
+        batch may advance a SimClock past further deadlines, so the drain
+        loop re-checks readiness until nothing is due. Returns the completed
+        `ServedResult`s ([] when nothing was due)."""
+        out = []
+        while True:
+            self._adopt_pending_plan()
+            batch = self.batcher.ready()
+            if batch is None:
+                return out
+            out.extend(self._run_batch(batch))
 
     def drain(self) -> list:
         """Flush and run everything still queued (end of stream)."""
@@ -149,8 +211,12 @@ class Engine:
 
     def serve(self, imgs) -> np.ndarray:
         """Synchronous convenience: submit every (C,H,W) image in `imgs`,
-        drain, and return (N, n_classes) logits in submission order."""
+        drain, and return (N, n_classes) logits in submission order. An
+        empty stream returns an empty (0, n_classes) array (np.stack on
+        zero results would raise)."""
         ids = [self.submit(img) for img in imgs]
+        if not ids:
+            return np.zeros((0, self.graph.n_classes()), np.float32)
         results = {r.id: r for r in self.drain()}
         return np.stack([results[i].logits for i in ids])
 
@@ -167,6 +233,7 @@ class Engine:
         c = self.plan.counts()
         return {
             **self.cache.stats(),
+            "devices": self.n_devices,
             "requests": self.n_requests,
             "batches": self.n_batches,
             "pad_samples": self.n_pad_samples,
@@ -183,22 +250,42 @@ class Engine:
     # ------------------------------------------------------------------
 
     def _executable(self, bucket: int):
-        key = plan_key(bucket, self.plan)
-        plan, params = self.plan, self.params
+        key = plan_key(bucket, self.plan, self.mesh)
+        plan, params, mesh = self.plan, self.params, self.mesh
 
         def build():
             c, h, w = plan.layers[0].in_shape
             imgs_s = jax.ShapeDtypeStruct((bucket, c, h, w), jnp.float32)
             nv_s = jax.ShapeDtypeStruct((), jnp.int32)
-            return jax.jit(_make_runner(plan)).lower(params, imgs_s, nv_s).compile()
+            if mesh is None:
+                fn = jax.jit(_make_runner(plan))
+            else:
+                # pin the AOT input layout: params/n_valid replicated, batch
+                # split over "data" (the batcher's align made it divisible)
+                fn = jax.jit(_make_runner(plan, mesh), in_shardings=(
+                    sharding_for((), (), mesh),
+                    self._batch_sharding((bucket, c, h, w)),
+                    sharding_for((), (), mesh)))
+            return fn.lower(params, imgs_s, nv_s).compile()
 
         return self.cache.get_or_compile(key, plan, build)
+
+    def _batch_sharding(self, shape):
+        """NamedSharding splitting dim 0 over the mesh's data axis (the
+        logical-axis rules of parallel/api resolve "batch" -> ("data",))."""
+        return sharding_for(shape, ("batch",) + (None,) * (len(shape) - 1),
+                            self.mesh)
 
     def _run_batch(self, batch: MicroBatch) -> list:
         imgs = jnp.stack([r.img for r in batch.requests])
         if batch.bucket > batch.n_real:  # ragged tail: all-zero pad samples
             pad = jnp.zeros((batch.bucket - batch.n_real,) + imgs.shape[1:], imgs.dtype)
             imgs = jnp.concatenate([imgs, pad])
+        if self.mesh is not None:
+            # commit the batch to the compiled layout (a no-op re-put when
+            # already placed; uncommitted host arrays would also auto-shard,
+            # but an explicitly committed input must never silently reshard)
+            imgs = jax.device_put(imgs, self._batch_sharding(imgs.shape))
         exe = self._executable(batch.bucket)
         t0 = time.perf_counter()
         logits, occs = exe(self.params, imgs, jnp.asarray(batch.n_real, jnp.int32))

@@ -4,9 +4,12 @@ Serving cannot afford a recompile per request: the whole point of bucketed
 batching is that the set of distinct programs is small and each compiles
 exactly once. The cache key is
 
-    (batch bucket, block_c, occupancy signature, graph signature)
+    (batch bucket, block_c, occupancy signature, graph signature, mesh shape)
 
-where the graph signature is the plan's `LayerGraph.signature()` — one engine
+where the mesh shape is the serving data mesh's ((axis, size), ...) — a
+sharded executable bakes its device layout into the program, so one cache
+serves the 1..N-device layouts of a schedule side by side (DESIGN.md §6) —
+and the graph signature is the plan's `LayerGraph.signature()` — one engine
 (or one shared cache) can serve several networks (VGG-19 / LeNet / AlexNet)
 without two structurally different models ever colliding on a program — and
 the occupancy signature is the tuple of per-layer impl decisions
@@ -34,14 +37,24 @@ class PlanKey:
     block_c: int  # the plan's channel-block size (0 = per-layer auto)
     occ_sig: tuple  # per-layer (kind, impl) decisions — the occupancy bucket
     graph_sig: tuple = ()  # LayerGraph.signature() — the network's structure
+    mesh_shape: tuple = ()  # ((axis, size), ...) of the data mesh; () = 1 device
 
 
-def plan_key(bucket: int, plan) -> PlanKey:
-    """The cache key of executing `plan` at batch size `bucket`."""
+def plan_key(bucket: int, plan, mesh=None) -> PlanKey:
+    """The cache key of executing `plan` at batch size `bucket` on `mesh`.
+
+    `mesh` is the serving data mesh (None or a 1-device mesh key as `()`): a
+    sharded executable bakes its device layout into the compiled program, so
+    one shared cache can hold the 1..N-device variants of the same schedule
+    side by side without collisions.
+    """
     graph = getattr(plan, "graph", None)
+    mesh_shape = () if mesh is None or mesh.size == 1 else tuple(
+        (str(a), int(s)) for a, s in mesh.shape.items())
     return PlanKey(bucket=int(bucket), block_c=int(plan.block_c),
                    occ_sig=tuple((lp.kind, lp.impl) for lp in plan.layers),
-                   graph_sig=graph.signature() if graph is not None else ())
+                   graph_sig=graph.signature() if graph is not None else (),
+                   mesh_shape=mesh_shape)
 
 
 class PlanCache:

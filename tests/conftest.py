@@ -1,13 +1,48 @@
 import os
+import subprocess
 import sys
+import textwrap
+
+import pytest
 
 # tests must see ONE device (the dry-run sets 512 in its own process only)
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, SRC)
 # make tests/_hypothesis_compat.py importable regardless of pytest import mode
 sys.path.insert(0, os.path.dirname(__file__))
 # repo root: the benchmark harness (`import benchmarks`) is under test too
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, ROOT)
 
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+
+# the `sharding` marker is registered once, in pyproject.toml
+# [tool.pytest.ini_options] markers
+
+
+@pytest.fixture
+def virtual_devices():
+    """Runner executing python code under N virtual CPU devices
+    (`XLA_FLAGS=--xla_force_host_platform_device_count=N`). The flag only
+    takes effect before jax initializes, so the code runs in a fresh
+    subprocess with PYTHONPATH covering src/ and the repo root; stdout is
+    returned for assertions. Shared by the sharded-serving tests
+    (tests/test_serving_sharded.py) and anything else marked `sharding`."""
+
+    def run(code: str, n: int = 4, timeout: int = 420) -> str:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            f" --xla_force_host_platform_device_count={n}").strip()
+        env["PYTHONPATH"] = os.pathsep.join([os.path.abspath(SRC),
+                                             os.path.abspath(ROOT)])
+        r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                           capture_output=True, text=True, timeout=timeout,
+                           env=env)
+        assert r.returncode == 0, \
+            f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+        return r.stdout
+
+    return run

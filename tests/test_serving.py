@@ -61,10 +61,46 @@ def _engine(params, **kw):
 
 def test_bucket_sizes():
     assert bucket_sizes(8) == (1, 2, 4, 8)
-    assert bucket_sizes(6) == (1, 2, 4)
+    assert bucket_sizes(6) == (1, 2, 4, 6)  # non-pow2 cap HONORED, not clamped
     assert bucket_sizes(1) == (1,)
     with pytest.raises(ValueError):
         bucket_sizes(0)
+
+
+def test_batcher_honors_non_power_of_two_max_batch():
+    """max_batch=6 used to be silently clamped to 4; the requested cap must
+    now be a real bucket (a full 6-queue forms one 6-batch, not 4 + leftovers)."""
+    clock = SimClock()
+    b = MicroBatcher(max_batch=6, deadline_s=1.0, clock=clock)
+    assert b.max_batch == 6 and b.buckets == (1, 2, 4, 6)
+    for i in range(6):
+        b.submit(i)
+    batch = b.ready()  # full bucket dispatches immediately at the true cap
+    assert batch is not None and batch.n_real == 6 and batch.bucket == 6
+    assert b.pending() == 0
+    b.submit(99)
+    clock.advance(1.1)
+    assert b.ready().bucket == 2  # pow2 buckets below the cap still serve
+
+
+def test_batcher_align_device_slices():
+    """align=N (sharded serving): executed buckets are N-multiples whose
+    per-device slice keeps the min_bucket bit-exactness floor."""
+    b = MicroBatcher(max_batch=8, deadline_s=1.0, clock=SimClock(), align=4)
+    assert b.exec_buckets() == (8,)  # 8/4 = 2 >= min_bucket; 4/4 = 1 < floor
+    assert b.bucket_for(1) == 8 and b.bucket_for(8) == 8
+    b2 = MicroBatcher(max_batch=8, deadline_s=1.0, clock=SimClock(), align=2)
+    assert b2.exec_buckets() == (4, 8)
+    assert b2.bucket_for(3) == 4
+    with pytest.raises(ValueError, match="multiple of"):
+        MicroBatcher(max_batch=6, deadline_s=1.0, clock=SimClock(), align=4)
+    # a full bucket that would leave shards below the min_bucket floor must
+    # REFUSE, not silently clamp away the bit-exactness contract
+    with pytest.raises(ValueError, match="floor"):
+        MicroBatcher(max_batch=8, deadline_s=1.0, clock=SimClock(), align=8)
+    b3 = MicroBatcher(max_batch=8, deadline_s=1.0, clock=SimClock(), align=8,
+                      min_bucket=1)  # explicit opt-in to M=1 shards
+    assert b3.exec_buckets() == (8,)
 
 
 def test_batcher_full_bucket_dispatches_immediately():
@@ -142,6 +178,49 @@ def test_engine_matches_run_plan_fp32_exact(params):
     assert eng.stats()["pad_samples"] > 0  # the ragged tail really was padded
 
 
+def test_engine_poll_drains_burst_of_full_buckets(params):
+    """A burst of 3x max_batch requests leaves three full buckets due AT
+    ONCE; one poll() must drain them all (the old one-batch-per-poll loop
+    stranded the rest until the next deadline poll, so a queued request
+    could wait arbitrarily longer than deadline_s under load)."""
+    eng = _engine(params)  # max_batch=4, SimClock
+    imgs = [_img(7000 + i) for i in range(12)]
+    for img in imgs:
+        eng.submit(img)
+    results = eng.poll()
+    assert len(results) == 12  # every due full bucket served in this poll
+    assert eng.batcher.pending() == 0
+    assert sorted(r.id for r in results) == list(range(12))
+    assert eng.stats()["batches"] == 3
+    # and the burst's logits are still the whole-batch reference, per bucket
+    ref = np.asarray(run_plan(eng.plan, params, jnp.stack(imgs), TINY))
+    by_id = {r.id: r.logits for r in results}
+    assert np.array_equal(np.stack([by_id[i] for i in range(12)]), ref)
+    assert eng.poll() == []  # nothing left due
+
+
+def test_engine_serve_empty_request_list(params):
+    """serve([]) used to crash in np.stack on the empty result list; it must
+    return an empty (0, n_classes) float32 array instead."""
+    eng = _engine(params)
+    out = eng.serve([])
+    assert out.shape == (0, TINY.n_classes) and out.dtype == np.float32
+    assert eng.stats()["batches"] == 0 and eng.stats()["requests"] == 0
+    # and the engine still serves normally afterwards
+    assert eng.serve([_img(0)]).shape == (1, TINY.n_classes)
+
+
+def test_engine_non_power_of_two_max_batch_exact(params):
+    """max_batch=6 end-to-end: the cap bucket compiles and stays bit-exact
+    against the whole-batch reference."""
+    eng = _engine(params, max_batch=6)
+    imgs = [_img(7100 + i) for i in range(6)]
+    served = eng.serve(imgs)
+    ref = np.asarray(run_plan(eng.plan, params, jnp.stack(imgs), TINY))
+    assert np.array_equal(served, ref)
+    assert eng.stats()["batches"] == 1  # one full 6-bucket, no 4+2 split
+
+
 def test_engine_exact_on_fully_dense_requests(params):
     """No dead channels at all: compaction is the identity for every batch
     composition, so exactness must hold here too (and the plan goes dense)."""
@@ -177,6 +256,18 @@ def test_plan_key_distinguishes_schedule_not_occupancy(params):
     assert plan_key(4, sparse) == plan_key(4, sparse2)  # same schedule: one program
     assert plan_key(4, sparse) != plan_key(4, dense)
     assert plan_key(4, sparse) != plan_key(2, sparse)
+
+
+def test_plan_key_one_device_mesh_is_the_unsharded_key(params):
+    """A 1-device mesh compiles the same program as no mesh at all, so the
+    keys must collide (mesh_shape only appears at >= 2 devices; the sharded
+    subprocess tests cover the distinct 2-/4-device keys)."""
+    from repro.parallel import data_mesh
+
+    plan = plan_network(params, jnp.stack([_img(0)]), TINY,
+                        occ_threshold=0.9, block_c=8)
+    assert plan_key(4, plan).mesh_shape == ()
+    assert plan_key(4, plan, data_mesh(1)) == plan_key(4, plan)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,199 @@
+"""Data-parallel sharded serving (DESIGN.md §6): sharded `run_plan` /
+`Engine` logits must be bit-identical to the single-device reference across
+mesh sizes 1/2/4 and ragged (padded) buckets, the occupancy statistic must
+aggregate globally across shards, and the device-count sweep benchmark must
+emit its JSON artifact.
+
+Every test runs in a subprocess seeing 4 virtual CPU devices (the
+`virtual_devices` conftest fixture —
+`XLA_FLAGS=--xla_force_host_platform_device_count=4` only takes effect
+before jax initializes, and the in-process suite must keep ONE device).
+"""
+import json
+import textwrap
+
+import pytest
+
+pytestmark = pytest.mark.sharding
+
+# Shared dead-channel band across all samples: the condition under which the
+# shared-union compaction permutation — and with it the summation order — is
+# identical for ANY batch slice, so shard-local execution is bit-exact
+# against the whole-batch reference (all-zero pads never perturb the union).
+SETUP = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.vgg19_sparse import CNNConfig
+from repro.models.cnn import init_cnn
+from repro.parallel import data_mesh
+from repro.pipeline import plan_network, run_plan, run_plan_sharded
+
+TINY = CNNConfig(name="vgg-serve-tiny", in_channels=16, img_size=12,
+                 plan=((8, 1), (16, 1)), n_classes=4)
+params = init_cnn(jax.random.PRNGKey(0), TINY)
+
+def img(seed, dead=8):
+    x = np.array(jax.random.uniform(jax.random.PRNGKey(seed), (16, 12, 12)),
+                 np.float32)
+    if dead:
+        x[16 - dead:] = 0.0
+    return jnp.asarray(x)
+
+calib = jnp.stack([img(900), img(901)])
+plan = plan_network(params, calib, TINY, occ_threshold=0.9, block_c=8)
+assert any(lp.impl != "dense" for lp in plan.layers)  # sparse kernels in play
+"""
+
+
+def test_run_plan_sharded_bit_identical_across_mesh_sizes(virtual_devices):
+    virtual_devices(SETUP + textwrap.dedent("""
+    assert jax.device_count() == 4
+    # ragged bucket: 6 real samples + 2 all-zero pads, and a full batch
+    full = jnp.stack([img(i) for i in range(8)])
+    ragged = jnp.concatenate([full[:6], jnp.zeros_like(full[:2])])
+    for imgs, nv in ((full, None), (ragged, 6)):
+        ref, ref_occs = run_plan(plan, params, imgs, collect_occupancy=True,
+                                 n_valid=nv)
+        ref, ref_occs = np.asarray(ref), np.asarray(ref_occs)
+        for n_dev in (1, 2, 4):
+            out, occs = run_plan_sharded(plan, params, imgs, data_mesh(n_dev),
+                                         collect_occupancy=True, n_valid=nv)
+            assert np.array_equal(np.asarray(out), ref), \\
+                (n_dev, nv, np.abs(np.asarray(out) - ref).max())
+            # every shard shares the dead band, so the shard-local stats and
+            # their valid-weighted aggregate equal the global measurement
+            np.testing.assert_allclose(np.asarray(occs), ref_occs,
+                                       rtol=1e-6, atol=1e-6)
+    # logits-only path (no occupancy collection) shards identically
+    out = run_plan_sharded(plan, params, full, data_mesh(4))
+    assert np.array_equal(np.asarray(out), np.asarray(run_plan(plan, params, full)))
+    # an indivisible batch must raise, never silently replicate
+    try:
+        run_plan_sharded(plan, params, full[:6], data_mesh(4))
+    except ValueError as e:
+        assert "divide" in str(e)
+    else:
+        raise AssertionError("expected ValueError on 6 % 4 != 0")
+    print("OK")
+    """))
+
+
+def test_sharded_engine_matches_single_device_reference(virtual_devices):
+    virtual_devices(SETUP + textwrap.dedent("""
+    from repro.serving import Engine, SimClock, plan_key
+
+    def build(mesh):
+        return Engine(params, TINY, plan=plan, max_batch=8, deadline_s=0.005,
+                      clock=SimClock(), mesh=mesh)
+
+    imgs = [img(i) for i in range(6)]  # ragged: pads 6 -> 8-bucket
+    ref = np.asarray(run_plan(plan, params, jnp.stack(imgs), TINY))
+
+    sharded = build(data_mesh(4))
+    assert sharded.n_devices == 4
+    assert sharded.batcher.exec_buckets() == (8,)  # 8/4 = 2 per-shard floor
+    served = sharded.serve(imgs)
+    assert np.array_equal(served, ref)
+    stats = sharded.stats()
+    assert stats["devices"] == 4 and stats["pad_samples"] == 2
+    assert all(np.isfinite(v) for v in stats["occ_ema"])  # pmean'd stat landed
+
+    single = build(None)  # explicit single-device engine under the same env
+    assert single.n_devices == 1
+    assert np.array_equal(single.serve(imgs), ref)
+
+    # one shared cache serves the 1..N-device layouts without collisions
+    keys = {plan_key(8, plan), plan_key(8, plan, data_mesh(2)),
+            plan_key(8, plan, data_mesh(4))}
+    assert len(keys) == 3
+    assert plan_key(8, plan, data_mesh(1)) == plan_key(8, plan)
+
+    # steady-state sharded serving never compiles after warmup
+    eng = build(data_mesh(2))
+    eng.warmup()
+    compiles = eng.cache.stats()["compiles"]
+    for wave in range(3):
+        eng.serve([img(100 + 10 * wave + i) for i in range(5)])
+    assert eng.cache.stats()["compiles"] == compiles
+
+    # autotune times candidates through the sharded executor (the calib
+    # batch of 2 must divide the device count, hence the 2-device mesh)
+    from repro.serving import autotune
+    res = autotune(params, calib, TINY, thresholds=(0.0, 0.9), block_cs=(8,),
+                   iters=1, mode="time", mesh=data_mesh(2))
+    assert len(res.candidates) == 2 and res.plan is not None
+    print("OK")
+    """))
+
+
+def test_auto_mesh_degrades_on_awkward_device_counts(virtual_devices):
+    """mesh="auto" on a host whose device count does not divide max_batch
+    must fall back to the largest count that does (never refuse to
+    construct); an EXPLICIT mismatched mesh still raises."""
+    virtual_devices(SETUP + textwrap.dedent("""
+    from repro.serving import Engine, SimClock, auto_mesh
+    assert jax.device_count() == 3
+    assert auto_mesh(8).size == 2  # 8 % 3 != 0 -> degrade to 2 devices
+    assert auto_mesh(6).size == 3
+    assert auto_mesh(1).size == 1
+    # the min_bucket floor binds too: 2 devices over max_batch=2 would run
+    # M=1 shards, so auto stays single-device unless the floor is lowered
+    assert auto_mesh(2).size == 1
+    assert auto_mesh(2, min_bucket=1).size == 2
+    eng = Engine(params, TINY, plan=plan, max_batch=8, clock=SimClock())
+    assert eng.n_devices == 2  # default mesh="auto" constructed and degraded
+    out = eng.serve([img(i) for i in range(5)])
+    assert out.shape == (5, 4) and np.all(np.isfinite(out))
+    try:
+        Engine(params, TINY, plan=plan, max_batch=8, clock=SimClock(),
+               mesh=data_mesh(3))
+    except ValueError as e:
+        assert "multiple of" in str(e)
+    else:
+        raise AssertionError("explicit 3-device mesh with max_batch=8 must raise")
+    print("OK")
+    """), n=3)
+
+
+def test_sharded_occupancy_aggregates_valid_weighted(virtual_devices):
+    """A ragged bucket whose tail shard holds ONLY pad samples: the weighted
+    cross-shard aggregation must ignore the empty shard (weight 0) and still
+    reproduce the global n_valid-masked statistic."""
+    virtual_devices(SETUP + textwrap.dedent("""
+    full = jnp.stack([img(i) for i in range(4)])
+    imgs = jnp.concatenate([full, jnp.zeros_like(full)])  # 4 real + 4 pads
+    # mesh=4: shards 2 and 3 hold only pads -> local weight 0
+    _, occs = run_plan_sharded(plan, params, imgs, data_mesh(4),
+                               collect_occupancy=True, n_valid=4)
+    _, ref = run_plan(plan, params, imgs, collect_occupancy=True, n_valid=4)
+    occs, ref = np.asarray(occs), np.asarray(ref)
+    assert np.all(np.isfinite(occs))
+    np.testing.assert_allclose(occs, ref, rtol=1e-6, atol=1e-6)
+    assert occs[0] < 1.0  # the dead band really registered, not washed out
+    print("OK")
+    """))
+
+
+def test_serve_sharded_benchmark_emits_json(virtual_devices, tmp_path):
+    """Acceptance: benchmarks/serve_sharded.py sweeps device count x request
+    rate and emits BENCH_serve_sharded.json with throughput per device count."""
+    virtual_devices(textwrap.dedent(f"""
+    import json
+    from benchmarks import serve_sharded
+
+    path = serve_sharded.main(reduced=True, json_dir={str(tmp_path)!r},
+                              device_counts=(1, 2, 4), rates=(100.0,),
+                              n_requests=8)
+    data = json.loads(open(path).read())
+    assert data["name"] == "serve_sharded"
+    devs = sorted(p["devices"] for p in data["points"])
+    assert devs == [1, 2, 4]
+    for p in data["points"]:
+        assert p["throughput_rps"] > 0
+        assert p["p95_ms"] >= p["p50_ms"] > 0
+        assert p["stream_compiles"] == 0  # steady-state never compiles
+    print("OK:" + path)
+    """))
+    out = list(tmp_path.glob("BENCH_serve_sharded.json"))
+    assert len(out) == 1
+    data = json.loads(out[0].read_text())
+    assert {p["devices"] for p in data["points"]} == {1, 2, 4}
