@@ -12,9 +12,9 @@ import numpy as np
 
 from repro.core import synth_feature_map, window_stats
 
-# v5e-class constants (same as the dry-run roofline)
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
+# v5e-class roofline constants — one definition, in the registry (the cost
+# dispatch every planner/autotune decision already routes through)
+from repro.graph.registry import HBM_BW, PEAK_FLOPS  # noqa: E402,F401
 
 
 def time_fn(f, *args, iters: int = 5, warmup: int = 2) -> float:
@@ -27,6 +27,20 @@ def time_fn(f, *args, iters: int = 5, warmup: int = 2) -> float:
         jax.block_until_ready(f(*args))
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts) * 1e6)
+
+
+def dead_band_calib(graph, n: int, seed: int = 0, dead_frac: float = 0.5):
+    """(N,C,H,W) calibration batch with a shared dead trailing-channel band
+    (the post-ReLU channel death the planner exploits; DESIGN.md §2.2) —
+    the one calibration recipe the model-zoo and weight-sparsity sweeps
+    share, so their plans are comparable. The first conv's input may be
+    fully dense (3-channel images); deeper layers still go sparse from the
+    net's own ReLU."""
+    from repro.core import dead_channel_band
+
+    c, h, w = graph.in_shape
+    return dead_channel_band(
+        jax.random.uniform(jax.random.PRNGKey(seed), (n, c, h, w)), dead_frac)
 
 
 def serve_replay_point(engine, imgs, rate_rps: float):
@@ -74,11 +88,27 @@ def git_sha() -> str:
         return "unknown"
 
 
+def jax_versions() -> dict:
+    """{"jax": ..., "jaxlib": ...} of the producing environment — stamped
+    into every BENCH_*.json next to the git SHA: two runs of the same commit
+    on different jax/jaxlib builds are different perf points (XLA codegen
+    moves between releases), and without the stamp they are
+    indistinguishable in the trajectory."""
+    out = {}
+    for mod in ("jax", "jaxlib"):
+        try:
+            out[mod] = __import__(mod).__version__
+        except Exception:
+            out[mod] = "unknown"
+    return out
+
+
 def write_bench_json(name: str, rows, out_dir: str = ".", extra: dict | None = None) -> str:
     """Write BENCH_<name>.json — the machine-readable twin of the CSV the
     benchmark modules print, so the perf trajectory is captured per run.
-    Every payload is stamped with the git SHA and a UTC timestamp, so a
-    BENCH artifact is attributable to the commit that produced it.
+    Every payload is stamped with the git SHA, a UTC timestamp and the
+    jax/jaxlib versions, so a BENCH artifact is attributable to the commit
+    AND the environment that produced it.
 
     rows: list of dicts; each needs at least name/us_per_call (derived and any
     metric keys ride along verbatim). Returns the written path.
@@ -88,6 +118,7 @@ def write_bench_json(name: str, rows, out_dir: str = ".", extra: dict | None = N
     payload = {"name": name, "schema": "name,us_per_call,derived",
                "git_sha": git_sha(),
                "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+               "versions": jax_versions(),
                "rows": list(rows)}
     if extra:
         payload.update(extra)

@@ -32,15 +32,10 @@ def _zoo(reduced: bool = True):
 
 
 def _calib(graph, n: int, seed: int = 0, dead_frac: float = 0.5):
-    """Batch with a shared dead trailing-channel band (post-ReLU channel
-    death the planner exploits); the first conv's input may be fully dense
-    (3-channel images) — deeper layers still go sparse from the net's own
-    ReLU."""
-    from repro.core import dead_channel_band
+    """Shared dead-band calibration recipe (see `_util.dead_band_calib`)."""
+    from benchmarks._util import dead_band_calib
 
-    c, h, w = graph.in_shape
-    return dead_channel_band(
-        jax.random.uniform(jax.random.PRNGKey(seed), (n, c, h, w)), dead_frac)
+    return dead_band_calib(graph, n, seed, dead_frac)
 
 
 def rows(reduced: bool = True, batch: int = 2):

@@ -11,7 +11,8 @@ attributable point to the perf trajectory instead of scrolling away. The
 serving benchmark (`serve_vgg19`) always writes its own
 BENCH_serve_vgg19.json and is part of the default set; the model-zoo smoke
 (`model_zoo`) runs the reduced LeNet/AlexNet/VGG graphs through the planned
-pipeline.
+pipeline, and the weight-sparsity sweep (`sparse_weights`) runs the same
+zoo pruned at each target BSR density through the joint planner.
 """
 from __future__ import annotations
 
@@ -35,6 +36,7 @@ def main() -> None:
         roofline,
         serve_sharded,
         serve_vgg19,
+        sparse_weights,
         table3_single_layer,
     )
 
@@ -49,6 +51,7 @@ def main() -> None:
         ("kernels", kernels_micro),
         ("roofline", roofline),
         ("zoo", model_zoo),
+        ("sparse_weights", sparse_weights),
         ("serve", serve_vgg19),
         # jax is initialized by the imports above, so the sharded sweep sees
         # however many devices the operator's XLA_FLAGS exposed (1 by
@@ -66,8 +69,8 @@ def main() -> None:
     for name, mod in modules:
         if args.only and name != args.only:
             continue
-        # the serving benchmarks write their own BENCH json; same dir
-        own_json = name in ("serve", "serve_sharded")
+        # these benchmarks write their own (richer) BENCH json; same dir
+        own_json = name in ("serve", "serve_sharded", "sparse_weights")
         kwargs = {"json_dir": args.json} if (args.json and own_json) else {}
         t0 = time.time()
         if args.json is None:

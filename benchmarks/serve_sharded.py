@@ -116,11 +116,17 @@ def main(reduced: bool = True, json_dir: str = ".", device_counts=None,
         n_requests = n_requests or 32
     avail = jax.device_count()
     device_counts = device_counts or (1, 2, 4)
-    usable = [d for d in device_counts if d <= avail and max_batch % d == 0]
+    # same admissibility rule as Engine/auto_mesh: the count must divide
+    # max_batch AND leave every shard >= the min_bucket=2 bit-exactness
+    # floor — d == max_batch divides but MicroBatcher(align=d) would refuse
+    # the 1-sample shards, aborting the sweep after the points before it
+    usable = [d for d in device_counts
+              if d <= avail and max_batch % d == 0
+              and (d == 1 or max_batch // d >= 2)]
     dropped = sorted(set(device_counts) - set(usable))
     if dropped:
         print(f"_meta/devices,0,skipping device counts {dropped} "
-              f"(host exposes {avail}, max_batch={max_batch})")
+              f"(host exposes {avail}, max_batch={max_batch}, min_bucket=2)")
     rows, points, plan = sweep(usable, rates, n_requests, graph,
                                max_batch=max_batch)
     for r in rows:

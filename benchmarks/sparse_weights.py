@@ -1,0 +1,98 @@
+"""Weight-density x model sweep: pruned serving through the planned pipeline.
+
+For each reduced LayerGraph network (LeNet / AlexNet / VGG) and each target
+BSR block density, magnitude-prune the params (`repro.sparse_weights`), let
+`plan_network` arbitrate dense/ECR/PECR/BSR per layer from the measured
+activation occupancy AND the achieved weight density, and report:
+
+- wall time of the jitted planned executor (`run_plan`) over a small batch,
+- the plan's per-impl layer counts (how many layers the joint cost model
+  actually handed to the BSR path at this density),
+- the achieved block density + probe logit drift from the `PruneReport`,
+- the max logits deviation of the planned executor vs the dense-on-pruned
+  reference — the correctness gate that says the im2col/BSR lowering is
+  numerically sound on this topology.
+
+density=1.0 is the unpruned control row: it must plan ZERO bsr layers and
+match the activation-only plan of `benchmarks/model_zoo.py`.
+
+Emits BENCH_sparse_weights.json (the machine-readable perf-trajectory
+artifact CI uploads next to the serve benches).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._util import dead_band_calib, time_fn, write_bench_json
+from repro.graph import init_graph
+from repro.graph.executor import run_graph
+from repro.models.cnn import shift_dead_channels
+from repro.pipeline import plan_network, run_plan
+from repro.sparse_weights import prune_graph_params
+
+DENSITIES = (1.0, 0.6, 0.3, 0.1)
+
+
+def _zoo():
+    from repro.configs.alexnet import ALEXNET_REDUCED
+    from repro.configs.lenet import LENET_REDUCED
+    from repro.configs.vgg19_sparse import CNNConfig, vgg19_graph
+
+    vgg_tiny = vgg19_graph(CNNConfig(name="vgg-tiny", in_channels=16,
+                                     img_size=16, plan=((16, 2), (32, 1)),
+                                     n_classes=16))
+    return (LENET_REDUCED, ALEXNET_REDUCED, vgg_tiny)
+
+
+def rows(densities=DENSITIES, batch: int = 4):
+    out = []
+    for graph in _zoo():
+        base = shift_dead_channels(init_graph(jax.random.PRNGKey(0), graph))
+        calib = dead_band_calib(graph, batch)
+        for density in densities:
+            params, report = prune_graph_params(base, density, graph,
+                                                probe=calib)
+            plan = plan_network(params, calib, graph, block_c=8)
+            got = run_plan(plan, params, calib)
+            ref = run_graph(graph, params, calib, impl="dense")
+            dev = float(jnp.abs(jnp.asarray(got) - jnp.asarray(ref)).max())
+            t = time_fn(jax.jit(lambda p, x, pl=plan: run_plan(pl, p, x)),
+                        params, calib, iters=2, warmup=1)
+            c = plan.counts()
+            out.append({
+                "name": f"sparse_weights/{graph.name}/d{density:g}",
+                "us_per_call": t,
+                "derived": (f"batch={batch} bsr={c['bsr']} sparse={c['sparse']} "
+                            f"dense={c['dense']} achieved={report.density:.2f} "
+                            f"drift={report.max_logit_drift:.3g} "
+                            f"max_dev_vs_dense={dev:.2e}"),
+                "target_density": density,
+                "achieved_density": round(report.density, 4),
+                "max_logit_drift": report.max_logit_drift,
+                "top1_agreement": report.top1_agreement,
+                "counts": c,
+                "max_dev_vs_dense": dev,
+            })
+    return out
+
+
+def main(batch: int = 4, json_dir: str | None = None):
+    rs = rows(batch=batch)
+    for r in rs:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    if json_dir:
+        return write_bench_json("sparse_weights", rs, json_dir,
+                                extra={"densities": list(DENSITIES)})
+    return None
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--json", nargs="?", const=".", default=None, metavar="DIR",
+                    help="also write BENCH_sparse_weights.json (default dir: cwd)")
+    args = ap.parse_args()
+    main(batch=args.batch, json_dir=args.json)

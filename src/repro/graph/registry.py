@@ -13,6 +13,12 @@ Kinds:
   "conv_pool"  fused conv+ReLU+maxpool (the PECR family) — consumes the whole
                conv unit in one op, the conv result never leaves VMEM/registers.
 
+The registry is also THE cost-dispatch site: `unit_cost` / `unit_model_us`
+evaluate one conv unit's modeled FLOPs/bytes/roofline-time as any (kind,
+impl) — the planner's joint dense/ECR/PECR/BSR decision and the autotuner's
+noisy-clock fallback (`serving.autotune.plan_model_us`) both rank layers
+through it, so an impl's cost hook is consulted identically everywhere.
+
 The fusion rule lives here too: `fusion_eligible(unit)` says whether a conv
 unit's structure admits the fused epilogue (adjacent ReLU + pool,
 pooling stride == pool size, conv output tiled exactly by the pool — the
@@ -44,6 +50,11 @@ class OpImpl:
     sparse:  occupancy-dependent (skips dead channel blocks) — the planner may
              only place these below occ_threshold, and the cost hook honours
              the measured occupancy.
+    weight_sparse: depends on STATIC weight block density (skips pruned-away
+             weight blocks; activation occupancy buys it nothing) — the
+             planner only places these below its density gate, the cost hook
+             honours `weight_density`, and `validate_plan` re-checks the
+             params' measured density against the plan's at run time.
     pallas:  realized as a Pallas kernel (vs a jnp oracle / XLA path).
     fused_with: for kind "conv_pool", the kind-"conv" impl of the same family
              (used when a unit's pool is NOT fusion-eligible); for kind
@@ -56,6 +67,7 @@ class OpImpl:
     forward: Callable
     cost: Callable | None = None
     sparse: bool = False
+    weight_sparse: bool = False
     pallas: bool = False
     fused_with: str | None = None
 
@@ -133,6 +145,64 @@ def unit_impl(unit: ConvUnit, impl: str) -> tuple:
 
 
 # ---------------------------------------------------------------------------
+# Cost dispatch (the one place a unit is costed as a (kind, impl))
+# ---------------------------------------------------------------------------
+
+# v5e-class roofline constants (shared with benchmarks/_util and the dry-run)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _pool_round_trip(base: dict, pool: int, dtype_bytes: int = 4) -> dict:
+    """Cost of running an UNFUSED pool after a conv whose cost is `base`: the
+    intermediate write/read round trip and the pooled write that PECR fusion
+    deletes (the comparison baseline of DESIGN.md §2.3), plus the pool max
+    on the VPU."""
+    conv_out = base["out_elems"] * dtype_bytes
+    return {"flops": base["flops"] + base["out_elems"],
+            "bytes": base["bytes"] + conv_out + conv_out / (pool * pool),
+            "out_elems": base["out_elems"] // (pool * pool)}
+
+
+def unit_cost(kind: str, impl: str, *, c, h, w, o, k, stride=1, pool=None,
+              occupancy: float = 1.0, weight_density: float = 1.0,
+              batch: int = 1) -> dict:
+    """Modeled {"flops","bytes","out_elems"} of one conv unit executed as
+    (kind, impl). h/w are the PADDED input dims; `pool` is the unit's pool
+    window (None = no pool). A kind-"conv" impl with an adjacent pool is
+    costed as its own hook + the unfused round trip; a kind-"conv_pool" impl
+    consumes the pool in its hook. Occupancy/weight_density only reach hooks
+    whose impl declares the corresponding sparsity (a dense impl is costed
+    dense no matter what the input measured)."""
+    op = get_op(kind, impl)
+    kws = dict(stride=stride, batch=batch,
+               occupancy=occupancy if op.sparse else 1.0)
+    if op.weight_sparse:
+        kws["weight_density"] = weight_density
+    if pool is not None and kind != "conv_pool":
+        return _pool_round_trip(op.cost(c, h, w, o, k, k, **kws), pool)
+    if pool is not None:
+        kws["pool"] = pool
+    return op.cost(c, h, w, o, k, k, **kws)
+
+
+def unit_model_us(kind: str, impl: str, unit: ConvUnit, *,
+                  occupancy: float = 1.0, weight_density: float = 1.0,
+                  batch: int = 1) -> float:
+    """Roofline-modeled time (us) of executing `unit` as (kind, impl) — the
+    common currency of the planner's per-layer impl choice and the
+    autotuner's whole-plan model (`plan_model_us` sums this per layer)."""
+    conv = unit.conv
+    c, h, w = unit.in_shape
+    cost = unit_cost(kind, impl, c=c, h=h + 2 * conv.pad, w=w + 2 * conv.pad,
+                     o=conv.c_out, k=conv.k, stride=conv.stride,
+                     pool=unit.pool.p if unit.pool is not None else None,
+                     occupancy=occupancy, weight_density=weight_density,
+                     batch=batch)
+    return max(cost["flops"] / PEAK_FLOPS, cost["bytes"] / HBM_BW) * 1e6
+
+
+# ---------------------------------------------------------------------------
 # Registrations — the entire impl surface, in one place
 # ---------------------------------------------------------------------------
 
@@ -193,16 +263,25 @@ def _conv_pool_cost(c, h, w, o, kh, kw, **kw_args):
 
 
 def _conv_pool_unfused_cost(c, h, w, o, kh, kw, *, pool=2, dtype_bytes=4, **kw_args):
-    """Unfused conv -> ReLU -> pool: the conv cost plus the intermediate
-    write/read round trip and the pooled write that PECR fusion deletes
-    (the comparison baseline of DESIGN.md §2.3)."""
+    """Unfused conv -> ReLU -> pool: the conv cost plus the round trip PECR
+    deletes (`_pool_round_trip` over the ECR/dense conv hook)."""
     from repro.kernels.ecr_conv.ops import ecr_conv_cost
 
-    base = ecr_conv_cost(c, h, w, o, kh, kw, dtype_bytes=dtype_bytes, **kw_args)
-    conv_out = base["out_elems"] * dtype_bytes
-    return {"flops": base["flops"] + base["out_elems"],  # pool max on the VPU
-            "bytes": base["bytes"] + conv_out + conv_out / (pool * pool),
-            "out_elems": base["out_elems"] // (pool * pool)}
+    return _pool_round_trip(
+        ecr_conv_cost(c, h, w, o, kh, kw, dtype_bytes=dtype_bytes, **kw_args),
+        pool, dtype_bytes)
+
+
+def _conv_bsr(xp, w, *, stride, block_c=0):
+    from repro.sparse_weights.conv import conv2d_bsr
+
+    return conv2d_bsr(xp, w, stride)
+
+
+def _bsr_cost(c, h, w, o, kh, kw, **kw_args):
+    from repro.sparse_weights.conv import bsr_conv_cost
+
+    return bsr_conv_cost(c, h, w, o, kh, kw, **kw_args)
 
 
 register_op(OpImpl("conv", "dense", _conv_dense, cost=_conv_cost))
@@ -211,6 +290,8 @@ register_op(OpImpl("conv", "ecr", _conv_ecr, cost=_conv_cost, sparse=True,
                    fused_with="pecr"))
 register_op(OpImpl("conv", "ecr_pallas", _conv_ecr_pallas, cost=_conv_cost,
                    sparse=True, pallas=True, fused_with="pecr_pallas"))
+register_op(OpImpl("conv", "bsr", _conv_bsr, cost=_bsr_cost,
+                   weight_sparse=True, pallas=True))
 register_op(OpImpl("conv_pool", "unfused", _conv_pool_unfused,
                    cost=_conv_pool_unfused_cost))
 register_op(OpImpl("conv_pool", "pecr", _conv_pool_pecr, cost=_conv_pool_cost,

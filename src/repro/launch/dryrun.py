@@ -26,9 +26,10 @@ from repro.parallel.api import axis_rules, logical_spec
 
 OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
-# v5e-class hardware constants (roofline terms derive from these)
-PEAK_FLOPS = 197e12  # bf16 / chip
-HBM_BW = 819e9  # B/s / chip
+# v5e-class hardware constants (roofline terms derive from these; the
+# chip-level pair lives in the registry's cost dispatch)
+from repro.graph.registry import HBM_BW, PEAK_FLOPS  # noqa: E402
+
 LINK_BW = 50e9  # B/s / link ICI
 
 

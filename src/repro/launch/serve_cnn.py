@@ -14,6 +14,8 @@ Autotuned plan:
 Data-parallel over 4 virtual CPU devices (DESIGN.md §6):
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
         PYTHONPATH=src python -m repro.launch.serve_cnn --devices 4
+Pruned-model serving (weight sparsity, DESIGN.md §7):
+    PYTHONPATH=src python -m repro.launch.serve_cnn --prune-density 0.3
 """
 from __future__ import annotations
 
@@ -74,7 +76,8 @@ def serve_cnn(*, model: str = "vgg19", full: bool = False,
               max_batch: int = 8, deadline_ms: float = 10.0,
               occ_threshold: float = 0.75, block_c: int = 8,
               do_autotune: bool = False, replan_band: float = 0.15,
-              devices: int = 0, seed: int = 0) -> dict:
+              devices: int = 0, prune_density: float = 1.0,
+              seed: int = 0) -> dict:
     graph = serving_graph(model, full)
     params = shift_dead_channels(init_graph(jax.random.PRNGKey(seed), graph))
     # --devices 0 degrades like the Engine's auto policy (largest local
@@ -83,6 +86,17 @@ def serve_cnn(*, model: str = "vgg19", full: bool = False,
     # calib batch must divide the device count so autotune can time the
     # SHARDED executor the engine will actually run
     calib = jnp.stack(synth_requests(graph, max(2, mesh.size), seed=seed + 1))
+    achieved_density = 1.0
+    if prune_density < 1.0:
+        from repro.sparse_weights import prune_graph_params
+
+        params, report = prune_graph_params(params, prune_density, graph,
+                                            probe=calib)
+        achieved_density = report.density
+        log.info("pruned to %.2f achieved block density (target %.2f): "
+                 "max logit drift %.3g, top-1 agreement %.2f",
+                 report.density, prune_density, report.max_logit_drift,
+                 report.top1_agreement)
     plan = None
     if do_autotune:
         result = autotune(params, calib, graph, thresholds=(0.5, 0.75, 0.9),
@@ -110,6 +124,8 @@ def serve_cnn(*, model: str = "vgg19", full: bool = False,
     summary = {
         "model": graph.name,
         "devices": engine.n_devices,
+        "prune_density": achieved_density,
+        "plan_bsr": stats["plan_bsr"],
         "requests": len(results),
         "rate_rps": rate,
         "throughput_rps": len(results) / max(makespan, 1e-9),
@@ -150,6 +166,11 @@ def main():
                          "must divide max-batch; run under "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N "
                          "for virtual CPU devices)")
+    ap.add_argument("--prune-density", type=float, default=1.0,
+                    help="magnitude-prune the weights to this BSR block "
+                         "density before planning (1.0 = no pruning); the "
+                         "planner then places ('conv','bsr') layers wherever "
+                         "weight sparsity beats activation sparsity")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve_cnn(model=args.model, full=args.full, n_requests=args.n_requests,
@@ -157,7 +178,7 @@ def main():
               deadline_ms=args.deadline_ms, occ_threshold=args.occ_threshold,
               block_c=args.block_c, do_autotune=args.autotune,
               replan_band=args.replan_band, devices=args.devices,
-              seed=args.seed)
+              prune_density=args.prune_density, seed=args.seed)
 
 
 if __name__ == "__main__":

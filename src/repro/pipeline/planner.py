@@ -1,4 +1,4 @@
-"""Per-layer dense/ECR/PECR planning over the LayerGraph IR.
+"""Per-layer dense/ECR/PECR/BSR planning over the LayerGraph IR.
 
 The paper's win is layer-dependent (Fig. 9: early layers are dense and big,
 deep layers are small and very sparse), so a whole-network setting is always
@@ -10,6 +10,14 @@ DESIGN.md §2.2, averaged over samples — and emits a `PipelinePlan`: one
 `LayerPlan` per conv unit, fused with its pooling (PECR) when the unit is
 sparse AND the registry's fusion rule admits it (adjacent ReLU+pool,
 stride == p, exact tiling), left as conv + unfused pool otherwise.
+
+Weight sparsity is the second, STATIC axis (DESIGN.md §7): each layer's
+params carry a measured BSR block density, and a pruned layer may run
+`("conv", "bsr")` — weight blocks skipped instead of activation blocks.
+The two axes trade off per layer (BSR reads every window but only the live
+weight blocks; ECR reads every weight but only the live activation blocks),
+so the planner arbitrates by the registry's modeled cost: below the density
+gate, BSR displaces the occupancy-rule choice iff its roofline time wins.
 
 The plan is a static, hashable schedule that carries its graph: `run_plan`
 executes it over any batch of the calibrated shape, one jitted whole-batch op
@@ -27,7 +35,7 @@ import jax.numpy as jnp
 from repro.graph import as_graph
 from repro.graph.executor import run_head, run_unit
 from repro.graph.ir import ConvSpec, LayerGraph, PoolSpec, graph_weights
-from repro.graph.registry import fusion_eligible, get_op
+from repro.graph.registry import fusion_eligible, get_op, unit_model_us
 
 
 @dataclass(frozen=True)
@@ -38,13 +46,14 @@ class LayerPlan:
     stage: int  # pooling stage (number of pools crossed before this conv)
     slot: int  # index within the stage
     kind: str  # "conv" | "conv_pool" (the chosen op kind; fused == conv_pool)
-    impl: str  # "dense" | "ecr_pallas" | "pecr_pallas" | "ecr" | "pecr"
+    impl: str  # "dense" | "ecr_pallas" | "pecr_pallas" | "ecr" | "pecr" | "bsr"
     occupancy: float  # measured mean channel-block occupancy of the input
     in_shape: tuple  # (C, H, W) entering the layer (pre-padding)
     out_shape: tuple  # (C, H, W) leaving the layer (post-pool if any)
     conv: ConvSpec = ConvSpec(0)  # the unit's conv node (k, stride, pad)
     relu: bool = True  # adjacent ReLU present
     pool: PoolSpec | None = None  # adjacent pool node (None = in-stage conv)
+    weight_density: float = 1.0  # measured BSR block density of the params
 
     def to_unit(self):
         """The `ConvUnit` this plan entry executes. The LayerPlan is the
@@ -70,9 +79,12 @@ class PipelinePlan:
     graph: LayerGraph | None = None  # the IR the plan was made for
 
     def counts(self) -> dict:
-        c = {"dense": 0, "sparse": 0, "fused": 0}
+        c = {"dense": 0, "sparse": 0, "fused": 0, "bsr": 0}
         for lp in self.layers:
-            if get_op(lp.kind, lp.impl).sparse:
+            op = get_op(lp.kind, lp.impl)
+            if op.weight_sparse:
+                c["bsr"] += 1
+            elif op.sparse:
                 c["sparse"] += 1
                 if lp.kind == "conv_pool":
                     c["fused"] += 1
@@ -132,6 +144,7 @@ def plan_network(
     occ_threshold: float = 0.75,
     block_c: int = 0,
     use_pallas: bool = True,
+    bsr_threshold: float = 0.5,
 ) -> PipelinePlan:
     """Walk the graph's conv units on a calibration batch, emit the schedule.
 
@@ -141,7 +154,19 @@ def plan_network(
     compaction gather; at occupancy ~1.0 the sparse path is pure overhead).
     A sparse unit whose structure passes the registry's fusion rule runs the
     fused conv+ReLU+pool op; any other pool stays unfused.
+
+    The STATIC axis rides next to the measured one: each layer's weights
+    carry a BSR block density (`repro.sparse_weights`; 1.0 for unpruned
+    params, so nothing below fires on a dense model). When a layer's density
+    is <= `bsr_threshold`, the `("conv", "bsr")` impl competes against the
+    occupancy-rule choice on the registry's modeled roofline time
+    (`unit_model_us`) and displaces it iff it wins — BSR trades reading
+    every window for reading only live weight blocks, so it beats ECR
+    exactly when the weight density undercuts the activation occupancy (and
+    beats dense almost always once pruned).
     """
+    from repro.sparse_weights import weight_block_density
+
     graph = as_graph(graph)
     if calib.ndim == 3:
         calib = calib[None]
@@ -149,8 +174,10 @@ def plan_network(
     conv_ws, _ = graph_weights(params)
     layers = []
     x = calib
+    batch = int(calib.shape[0])
     for unit, w in zip(graph.units(), conv_ws):
         occ = measure_occupancy(x, block_c)
+        wd = weight_block_density(w)
         go_sparse = occ <= occ_threshold
         if go_sparse:
             fused = get_op("conv", sparse_conv).fused_with
@@ -160,6 +187,13 @@ def plan_network(
                 kind, impl = "conv", sparse_conv
         else:
             kind, impl = "conv", "dense"
+        if use_pallas and wd <= bsr_threshold:
+            base_us = unit_model_us(kind, impl, unit, occupancy=occ,
+                                    batch=batch)
+            bsr_us = unit_model_us("conv", "bsr", unit, weight_density=wd,
+                                   batch=batch)
+            if bsr_us < base_us:
+                kind, impl = "conv", "bsr"
         # the dense oracle produces the next calibration input
         x = run_unit(x, w, unit, "conv", "dense")
         layers.append(
@@ -175,6 +209,7 @@ def plan_network(
                 conv=unit.conv,
                 relu=unit.relu,
                 pool=unit.pool,
+                weight_density=wd,
             )
         )
     return PipelinePlan(layers=tuple(layers), occ_threshold=occ_threshold,
@@ -211,11 +246,31 @@ def validate_plan(plan: PipelinePlan, params, imgs, graph=None) -> None:
         raise ValueError(
             f"plan has {len(plan.layers)} conv layers but params carry "
             f"{len(conv_ws)} conv weights (zip would silently truncate)")
+    import jax
+
     for lp, w in zip(plan.layers, conv_ws):
         if w.shape[1] != lp.in_shape[0]:
             raise ValueError(
                 f"conv_{lp.index + 1}: plan expects C_in={lp.in_shape[0]}, "
                 f"weight has C_in={w.shape[1]}")
+        # a BSR layer only makes sense against the params it was planned
+        # over: running a density-0.3 schedule on unpruned (or differently
+        # pruned) weights would silently execute the wrong cost model and,
+        # worse, hide that the served model is not the pruned one. Weight
+        # VALUES are only visible outside a trace (the serving engine's AOT
+        # lowering abstracts them), so the check runs on every eager call —
+        # plan time, tests, direct run_plan — and is skipped under jit.
+        if get_op(lp.kind, lp.impl).weight_sparse and \
+                not isinstance(w, jax.core.Tracer):
+            from repro.sparse_weights import weight_block_density
+
+            d = weight_block_density(w)
+            if abs(d - lp.weight_density) > 0.1:
+                raise ValueError(
+                    f"conv_{lp.index + 1}: plan runs '{lp.impl}' at weight "
+                    f"block density {lp.weight_density:.2f} but the params "
+                    f"measure {d:.2f} — a BSR plan must execute with the "
+                    f"pruned params it was planned over (re-run plan_network)")
     g = _plan_graph(plan, graph)
     if len(g.units()) != len(plan.layers):
         raise ValueError(

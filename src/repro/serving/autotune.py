@@ -27,13 +27,9 @@ import jax
 import numpy as np
 
 from repro.graph import as_graph
-from repro.graph.registry import get_op
+from repro.graph.registry import HBM_BW, PEAK_FLOPS, get_op, unit_model_us
 from repro.pipeline.planner import PipelinePlan, plan_network, run_plan, run_plan_sharded
 from repro.serving.plan_cache import plan_key
-
-# v5e-class roofline constants (same as benchmarks/_util and the dry-run)
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
 
 
 @dataclass
@@ -65,44 +61,32 @@ class AutotuneResult:
 
 
 def plan_model_us(plan: PipelinePlan, params, batch: int = 1) -> float:
-    """Roofline-modeled execution time (us) of a plan at a given batch size,
-    summed from the registry's op-level cost hooks plus the classifier GEMMs.
-    Every layer's kernel shape / stride / pool comes from its own LayerPlan
-    (the IR nodes ride along in the plan; `to_unit` rejects pre-IR plans), so
-    LeNet's 5x5 convs and AlexNet's strided/overlapping layers model at
-    their real geometry. Dense layers are the occupancy=1.0 point of the
-    same model; a unit with an unfused pool is costed by the registry's
-    ("conv_pool", "unfused") hook — the conv plus the intermediate round
-    trip that PECR deletes (DESIGN.md §2.3)."""
+    """Roofline-modeled execution time (us) of a plan at a given batch size:
+    the registry's `unit_model_us` per layer (each LayerPlan's own IR specs —
+    `to_unit` rejects pre-IR plans — so LeNet's 5x5 convs and AlexNet's
+    strided/overlapping layers model at their real geometry; dense layers
+    are the occupancy=1.0 point, BSR layers honour the plan's recorded
+    weight density, unfused pools cost the round trip PECR deletes) plus the
+    classifier GEMMs. Summing per-layer roofline maxima upper-bounds the
+    whole-program roofline the pre-BSR version took over global totals —
+    identical whenever one side of the roofline dominates every layer, which
+    these conv stacks satisfy, and a consistent ranking either way."""
     from repro.graph.ir import graph_weights
 
+    us = 0.0
+    for lp in plan.layers:
+        us += unit_model_us(lp.kind, lp.impl, lp.to_unit(),
+                            occupancy=lp.occupancy,
+                            weight_density=lp.weight_density, batch=batch)
+    # classifier: flatten -> dense head GEMMs
     flops = 0.0
     nbytes = 0.0
-    for lp in plan.layers:
-        lp.to_unit()  # validate the specs are real before costing them
-        c, h, w = lp.in_shape
-        o = lp.out_shape[0]
-        k, pad, stride = lp.conv.k, lp.conv.pad, lp.conv.stride
-        op = get_op(lp.kind, lp.impl)
-        occ = lp.occupancy if op.sparse else 1.0
-        if lp.pool is not None:
-            # fused: the layer's own hook; unfused: the shared baseline hook
-            hook = op.cost if lp.kind == "conv_pool" else \
-                get_op("conv_pool", "unfused").cost
-            cost = hook(c, h + 2 * pad, w + 2 * pad, o, k, k, stride=stride,
-                        pool=lp.pool.p, occupancy=occ, batch=batch)
-        else:
-            cost = op.cost(c, h + 2 * pad, w + 2 * pad, o, k, k, stride=stride,
-                           occupancy=occ, batch=batch)
-        flops += cost["flops"]
-        nbytes += cost["bytes"]
-    # classifier: flatten -> dense head GEMMs
     _, dense_ws = graph_weights(params)
     for w in dense_ws:
         d_in, d_out = w.shape
         flops += 2.0 * batch * d_in * d_out
         nbytes += 4.0 * (d_in * d_out + batch * (d_in + d_out))
-    return max(flops / PEAK_FLOPS, nbytes / HBM_BW) * 1e6
+    return us + max(flops / PEAK_FLOPS, nbytes / HBM_BW) * 1e6
 
 
 def hlo_model_us(fn, *args) -> float:

@@ -242,6 +242,7 @@ class Engine:
             "replan_errors": self.replan_errors,
             "plan_sparse": c["sparse"],
             "plan_dense": c["dense"],
+            "plan_bsr": c["bsr"],
             "occ_ema": [float(v) for v in np.round(self._occ_ema, 4)],
         }
 

@@ -4,7 +4,8 @@ Serving cannot afford a recompile per request: the whole point of bucketed
 batching is that the set of distinct programs is small and each compiles
 exactly once. The cache key is
 
-    (batch bucket, block_c, occupancy signature, graph signature, mesh shape)
+    (batch bucket, block_c, occupancy signature, graph signature, mesh shape,
+     weight-sparsity signature)
 
 where the mesh shape is the serving data mesh's ((axis, size), ...) — a
 sharded executable bakes its device layout into the program, so one cache
@@ -38,6 +39,7 @@ class PlanKey:
     occ_sig: tuple  # per-layer (kind, impl) decisions — the occupancy bucket
     graph_sig: tuple = ()  # LayerGraph.signature() — the network's structure
     mesh_shape: tuple = ()  # ((axis, size), ...) of the data mesh; () = 1 device
+    weight_sig: tuple = ()  # (layer index, rounded density) per BSR layer
 
 
 def plan_key(bucket: int, plan, mesh=None) -> PlanKey:
@@ -47,14 +49,27 @@ def plan_key(bucket: int, plan, mesh=None) -> PlanKey:
     sharded executable bakes its device layout into the compiled program, so
     one shared cache can hold the 1..N-device variants of the same schedule
     side by side without collisions.
+
+    The weight signature distinguishes PRUNED variants: two plans over the
+    same graph whose BSR layers were pruned to different densities are
+    different served models (same compiled program shape, different
+    params/schedules), and one engine or shared cache must never hand one
+    variant the other's entry. Only weight-sparse layers contribute (density
+    rounded to 2 dp — the granularity pruning actually achieves), so every
+    dense/ECR plan keeps the exact key it had before weight sparsity existed.
     """
+    from repro.graph.registry import get_op
+
     graph = getattr(plan, "graph", None)
     mesh_shape = () if mesh is None or mesh.size == 1 else tuple(
         (str(a), int(s)) for a, s in mesh.shape.items())
+    weight_sig = tuple(
+        (lp.index, round(getattr(lp, "weight_density", 1.0), 2))
+        for lp in plan.layers if get_op(lp.kind, lp.impl).weight_sparse)
     return PlanKey(bucket=int(bucket), block_c=int(plan.block_c),
                    occ_sig=tuple((lp.kind, lp.impl) for lp in plan.layers),
                    graph_sig=graph.signature() if graph is not None else (),
-                   mesh_shape=mesh_shape)
+                   mesh_shape=mesh_shape, weight_sig=weight_sig)
 
 
 class PlanCache:

@@ -1,0 +1,43 @@
+"""Weight-sparsity subsystem (DESIGN.md §7): the static counterpart of the
+activation-sparsity spine.
+
+Three pieces, all keyed to the SAME block geometry (`format.weight_block`):
+
+- `prune_graph_params` — offline magnitude pruning of a LayerGraph's
+  conv/dense params to (bt, bf) block patterns, with a `PruneReport` of
+  achieved per-layer density and probe logit drift;
+- `conv2d_bsr` — the forward: im2col lowered onto the existing
+  `kernels/bsr_matmul` Pallas kernel with the weight matrix as the sparse
+  operand (registered as `("conv", "bsr")` in `repro.graph.registry`, cost
+  hook `bsr_conv_cost`);
+- the planner integration lives in `repro.pipeline.planner`: `plan_network`
+  measures each layer's static weight block density next to its activation
+  occupancy and picks dense/ECR/PECR/BSR per layer by modeled cost.
+"""
+from repro.sparse_weights.conv import bsr_conv_cost, conv2d_bsr, conv2d_bsr_ref
+from repro.sparse_weights.format import (
+    conv_weight_matrix,
+    matrix_block_density,
+    weight_block,
+    weight_block_density,
+)
+from repro.sparse_weights.prune import (
+    LayerPruneStat,
+    PruneReport,
+    prune_graph_params,
+    prune_matrix,
+)
+
+__all__ = [
+    "LayerPruneStat",
+    "PruneReport",
+    "bsr_conv_cost",
+    "conv2d_bsr",
+    "conv2d_bsr_ref",
+    "conv_weight_matrix",
+    "matrix_block_density",
+    "prune_graph_params",
+    "prune_matrix",
+    "weight_block",
+    "weight_block_density",
+]

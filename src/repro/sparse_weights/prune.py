@@ -1,0 +1,146 @@
+"""Magnitude pruning of LayerGraph params to BSR block patterns.
+
+Offline model surgery (numpy, not traced): per layer, rank the (bt, bf)
+blocks of the weight's GEMM view by L2 norm and zero everything outside the
+top ceil(density * n_blocks) — the block shape comes from
+`format.weight_block`, so the zeros land exactly on the tiles the
+`kernels/bsr_matmul` schedule can skip. The returned `PruneReport` carries
+what serving actually needs to know before trusting a pruned model: the
+achieved per-layer block density (coarse block grids on tiny layers quantize
+hard — ceil(0.3 * 4 blocks) is half the layer, not 30%) and the logit drift
+of the dense forward on a probe batch (the accuracy proxy available without
+labels).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.ir import graph_weights
+from repro.sparse_weights.format import block_norms, conv_weight_matrix, weight_block
+
+
+@dataclass(frozen=True)
+class LayerPruneStat:
+    """One pruned weight: what was asked for vs what the block grid allowed."""
+
+    name: str  # "conv_1" / "dense_2"
+    shape: tuple  # original weight shape
+    block: tuple  # (bt, bf) tiling the zeros are aligned to
+    target_density: float
+    achieved_density: float  # kept_blocks / total_blocks (real blocks only)
+    kept_blocks: int
+    total_blocks: int
+
+
+@dataclass(frozen=True)
+class PruneReport:
+    layers: tuple  # tuple[LayerPruneStat, ...]
+    density: float  # block-weighted overall achieved density
+    max_logit_drift: float | None = None  # max |dense(pruned) - dense(orig)|
+    top1_agreement: float | None = None  # argmax match rate on the probe
+
+    def by_name(self) -> dict:
+        return {s.name: s for s in self.layers}
+
+
+def prune_matrix(m, density: float, block: tuple):
+    """Zero all but the top-|norm| ceil(density * n) (bt, bf) blocks of a 2-D
+    matrix. Returns (pruned, kept_blocks, total_blocks); total counts only
+    blocks that overlap real weight (not the zero padding of a ragged edge),
+    and kept counts only LIVE blocks — density >= 1 leaves the values
+    untouched but still reports the measured live-block count."""
+    bt, bf = block
+    m = np.asarray(m)
+    r, c = m.shape
+    nr, nc = -(-r // bt), -(-c // bf)
+    total = nr * nc
+    mp = np.zeros((nr * bt, nc * bf), m.dtype)
+    mp[:r, :c] = m
+    # the ranking statistic comes from format.block_norms — the one owner of
+    # the block geometry — so the prune pattern can never diverge from what
+    # weight_block_density / the planner cost model will measure
+    norms = np.asarray(block_norms(m, block))
+    keep = int(np.ceil(np.clip(density, 0.0, 1.0) * total))
+    mask = np.zeros(total, bool)
+    if keep:
+        # stable top-k by descending norm: ties break on block scan order, so
+        # the same weights always prune to the same pattern
+        order = np.argsort(-norms.ravel(), kind="stable")
+        mask[order[:keep]] = True
+    # a zero-norm block ranked into the top-k (already-dead weight, e.g. a
+    # re-pruned checkpoint) is not a LIVE block: dropping it from the mask
+    # keeps kept_blocks equal to what weight_block_density — the value the
+    # planner and validate_plan consume — will actually measure
+    mask &= norms.ravel() > 0
+    mask = mask.reshape(nr, nc)
+    mp = mp.reshape(nr, bt, nc, bf) * mask[:, None, :, None]
+    return mp.reshape(nr * bt, nc * bf)[:r, :c], int(mask.sum()), total
+
+
+def prune_graph_params(params, density: float, graph=None, *,
+                       per_layer: dict | None = None, prune_dense: bool = True,
+                       probe=None):
+    """Prune a params dict to BSR block patterns at a per-layer target density.
+
+    params: graph-native {"conv": [...], "dense": [...]} or the legacy VGG
+    layout (anything `graph_weights` reads); the pruned params come back
+    graph-native. `density` is the default target for every layer;
+    `per_layer` overrides it for individual conv layers by 0-based conv index
+    (the paper-style schedule where early layers stay denser). Dense-head
+    weights are pruned at the default target unless `prune_dense=False` —
+    zeros flow through the head's plain GEMMs for free, so this is a model
+    -size/accuracy knob, not an executor change.
+
+    `probe` (optional (N,C,H,W) batch, requires `graph`) measures accuracy
+    drift: the max |Δlogit| and top-1 agreement of the dense forward before
+    vs after pruning. Returns (pruned_params, PruneReport).
+    """
+    conv_ws, dense_ws = graph_weights(params)
+    per_layer = per_layer or {}
+    stats = []
+    new_conv = []
+    for i, w in enumerate(conv_ws):
+        target = float(per_layer.get(i, density))
+        mat = np.asarray(conv_weight_matrix(w))
+        block = weight_block(mat.shape[0], mat.shape[1])
+        pruned, kept, total = prune_matrix(mat, target, block)
+        new_conv.append(jnp.asarray(pruned.reshape(w.shape), w.dtype))
+        stats.append(LayerPruneStat(
+            name=f"conv_{i + 1}", shape=tuple(w.shape), block=block,
+            target_density=target, achieved_density=kept / total,
+            kept_blocks=kept, total_blocks=total))
+    new_dense = []
+    for i, w in enumerate(dense_ws):
+        if not prune_dense:
+            new_dense.append(w)
+            continue
+        mat = np.asarray(w).T  # (d_out, d_in), rows = outputs like conv's O
+        block = weight_block(mat.shape[0], mat.shape[1])
+        pruned, kept, total = prune_matrix(mat, float(density), block)
+        new_dense.append(jnp.asarray(pruned.T, w.dtype))
+        stats.append(LayerPruneStat(
+            name=f"dense_{i + 1}", shape=tuple(w.shape), block=block,
+            target_density=float(density), achieved_density=kept / total,
+            kept_blocks=kept, total_blocks=total))
+    pruned_params = {"conv": new_conv, "dense": new_dense}
+    kept = sum(s.kept_blocks for s in stats)
+    total = sum(s.total_blocks for s in stats)
+    drift = agree = None
+    if probe is not None:
+        if graph is None:
+            raise ValueError("prune_graph_params needs graph= to measure "
+                             "probe logit drift")
+        from repro.graph import as_graph
+        from repro.graph.executor import run_graph
+
+        g = as_graph(graph)
+        ref = np.asarray(run_graph(g, params, probe, impl="dense"))
+        got = np.asarray(run_graph(g, pruned_params, probe, impl="dense"))
+        drift = float(np.abs(got - ref).max())
+        agree = float((got.argmax(-1) == ref.argmax(-1)).mean())
+    return pruned_params, PruneReport(
+        layers=tuple(stats), density=kept / max(total, 1),
+        max_logit_drift=drift, top1_agreement=agree)

@@ -61,6 +61,44 @@ def test_bsr_all_zero_rows():
     assert np.asarray(jnp.abs(y)).max() == 0.0
 
 
+@pytest.mark.parametrize("block", [(8, 128, 128), (8, 32, 64), (16, 64, 128),
+                                   (8, 8, 8)])
+@pytest.mark.parametrize("t,f,d", [(24, 192, 96), (7, 100, 50)])
+def test_bsr_block_shape_sweep(block, t, f, d):
+    """Ref-vs-Pallas agreement across non-default block shapes, including
+    ragged (padded) edges — the geometries `conv2d_bsr` actually runs
+    (small-layer weight matrices shrink bf below the 128-lane default)."""
+    h = _sparse((t, f), 0.7, seed=t + f + block[1])
+    w = jax.random.normal(jax.random.PRNGKey(4), (f, d))
+    y = sparse_matmul(h, w, block=block)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(bsr_matmul_ref(h, w)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block", [(8, 128, 128), (8, 32, 128)])
+def test_bsr_all_zero_block_rows(block):
+    """A row-block whose every f-block is dead (cnt=0) must flush exact
+    zeros — the `@pl.when` guard never fires and the accumulator init is the
+    only write. Mixed with live row-blocks so the gather offsets are
+    exercised around the dead one."""
+    bt, bf, bd = block
+    t, f, d = 4 * bt, 4 * bf, 2 * bd
+    h = np.array(jax.random.normal(KEY, (t, f)))
+    h[bt : 2 * bt] = 0.0  # row-block 1 fully dead
+    h[2 * bt :, :2 * bf] = 0.0  # row-blocks 2-3 half dead
+    h = jnp.asarray(h)
+    w = jax.random.normal(jax.random.PRNGKey(5), (f, d))
+    ids, cnt = block_schedule(h, bt, bf)
+    assert int(cnt[1]) == 0 and int(cnt[2]) == 2
+    y = bsr_matmul_pallas(h, w, ids, cnt, block=block)
+    assert np.abs(np.asarray(y[bt : 2 * bt])).max() == 0.0
+    sched_ref = bsr_matmul_schedule_ref(h, w, np.asarray(ids), np.asarray(cnt),
+                                        block)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(sched_ref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(bsr_matmul_ref(h, w)),
+                               atol=1e-4)
+
+
 # ---------------------------------------------------------------------------
 # ecr_conv: channels x stride x dtype sweep, dead channel blocks
 # ---------------------------------------------------------------------------

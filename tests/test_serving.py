@@ -246,6 +246,31 @@ def test_plan_cache_compiles_each_key_exactly_once(params):
     assert stats["hits"] > 0 and stats["replans"] == 0
 
 
+def test_plan_cache_lru_eviction_and_counters():
+    """Boundedness regression: the cache must evict in LRU order (a hit
+    refreshes recency), count every hit/miss/eviction, and recompile an
+    evicted key on its next use — graphs x meshes x pruned densities
+    multiply keys, so an unbounded cache is a serving memory leak."""
+    from repro.serving import PlanCache, PlanKey
+
+    def key(b):
+        return PlanKey(bucket=b, block_c=8, occ_sig=(("conv", "dense"),))
+
+    cache = PlanCache(max_entries=2)
+    assert cache.get_or_compile(key(1), None, lambda: "exe1") == "exe1"
+    assert cache.get_or_compile(key(2), None, lambda: "exe2") == "exe2"
+    # hit on key(1) refreshes it: key(2) is now least-recently-used
+    assert cache.get_or_compile(key(1), None, lambda: "BUG") == "exe1"
+    assert cache.get_or_compile(key(3), None, lambda: "exe3") == "exe3"
+    assert key(2) not in cache and key(1) in cache and key(3) in cache
+    assert len(cache) == 2
+    assert cache.stats() == {"entries": 2, "compiles": 3, "hits": 1,
+                             "misses": 3, "evictions": 1}
+    # the evicted key is a real miss again: build runs a second time
+    assert cache.get_or_compile(key(2), None, lambda: "exe2b") == "exe2b"
+    assert cache.stats()["compiles"] == 4 and cache.stats()["evictions"] == 2
+
+
 def test_plan_key_distinguishes_schedule_not_occupancy(params):
     sparse = plan_network(params, jnp.stack([_img(0)]), TINY,
                           occ_threshold=0.9, block_c=8)
@@ -388,7 +413,8 @@ def test_occ_threshold_zero_yields_all_dense_plan(params):
     calib = jnp.stack([_img(0), _img(1)])  # sparse but nonzero
     plan = plan_network(params, calib, TINY, occ_threshold=0.0)
     assert all(lp.impl == "dense" for lp in plan.layers)
-    assert plan.counts() == {"dense": len(plan.layers), "sparse": 0, "fused": 0}
+    assert plan.counts() == {"dense": len(plan.layers), "sparse": 0, "fused": 0,
+                             "bsr": 0}
 
 
 def test_explicit_block_c_override_honored_end_to_end(params, monkeypatch):

@@ -1,0 +1,271 @@
+"""Weight-sparsity subsystem: pruning format, conv2d_bsr correctness, the
+planner's joint occupancy x density impl selection, plan-cache pruned-variant
+keys, and pruned LeNet/AlexNet/VGG end-to-end through the serving engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dead_channel_band
+from repro.graph import init_graph
+from repro.graph.registry import get_op, unit_model_us
+from repro.models.cnn import shift_dead_channels
+from repro.pipeline import plan_network, run_plan
+from repro.serving import plan_key
+from repro.sparse_weights import (
+    conv2d_bsr,
+    conv2d_bsr_ref,
+    conv_weight_matrix,
+    prune_graph_params,
+    prune_matrix,
+    weight_block,
+    weight_block_density,
+)
+
+
+def _graph(model: str):
+    from repro.launch.serve_cnn import serving_graph
+
+    return serving_graph(model)
+
+
+def _calib(graph, n=4, seed=0, dead_frac=0.5):
+    c, h, w = graph.in_shape
+    return dead_channel_band(
+        jax.random.uniform(jax.random.PRNGKey(seed), (n, c, h, w)), dead_frac)
+
+
+@pytest.fixture(scope="module")
+def vgg():
+    graph = _graph("vgg19")
+    params = shift_dead_channels(init_graph(jax.random.PRNGKey(0), graph))
+    return graph, params
+
+
+# ---------------------------------------------------------------------------
+# pruning format
+# ---------------------------------------------------------------------------
+
+
+def test_prune_matrix_zeros_whole_blocks_lowest_norm_first():
+    bt, bf = 8, 16
+    m = np.ones((2 * bt, 4 * bf), np.float32)
+    m[:bt, :bf] = 0.01  # weakest block
+    m[:bt, bf : 2 * bf] = 0.1  # second weakest
+    pruned, kept, total = prune_matrix(m, 0.75, (bt, bf))
+    assert (kept, total) == (6, 8)
+    assert np.abs(pruned[:bt, :2 * bf]).max() == 0.0  # both weak blocks gone
+    assert np.array_equal(pruned[bt:], m[bt:])  # strong blocks untouched
+
+
+def test_prune_matrix_ragged_edges_and_identity():
+    m = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (13, 50)))
+    same, kept, total = prune_matrix(m, 1.0, (8, 16))
+    assert np.array_equal(same, m) and kept == total
+    pruned, kept, total = prune_matrix(m, 0.5, (8, 16))
+    assert pruned.shape == m.shape
+    assert kept == int(np.ceil(0.5 * total))
+
+
+def test_prune_matrix_never_counts_dead_blocks_as_kept():
+    """Re-pruning already-pruned weight must report the LIVE density (what
+    weight_block_density will measure), not the nominal top-k size."""
+    bt, bf = 8, 16
+    m = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (2 * bt, 4 * bf)))
+    half, _, _ = prune_matrix(m, 0.5, (bt, bf))  # 4 of 8 blocks dead
+    same, kept, total = prune_matrix(half, 1.0, (bt, bf))
+    assert np.array_equal(same, half)
+    assert (kept, total) == (4, 8)
+    again, kept, total = prune_matrix(half, 0.75, (bt, bf))  # top-6 incl dead
+    assert kept == 4  # only the 4 live blocks count
+    assert np.array_equal(again, half)
+
+
+def test_weight_block_density_measures_pruned_conv():
+    w = jax.random.normal(jax.random.PRNGKey(2), (16, 16, 3, 3))
+    assert weight_block_density(w) == 1.0
+    mat = np.asarray(conv_weight_matrix(w))
+    block = weight_block(*mat.shape)
+    pruned, kept, total = prune_matrix(mat, 0.3, block)
+    d = weight_block_density(jnp.asarray(pruned.reshape(w.shape)))
+    assert abs(d - kept / total) < 1e-6
+
+
+def test_prune_graph_params_report_and_per_layer_override(vgg):
+    graph, params = vgg
+    probe = _calib(graph)
+    pruned, rep = prune_graph_params(params, 0.3, graph,
+                                     per_layer={0: 1.0}, probe=probe)
+    by = rep.by_name()
+    assert by["conv_1"].achieved_density == 1.0  # override honored
+    assert by["conv_2"].achieved_density <= 0.5
+    assert 0.0 < rep.density < 1.0
+    assert rep.max_logit_drift is not None and rep.top1_agreement is not None
+    # pruned params keep shapes and really carry the reported density
+    for w, lp in zip(pruned["conv"], ("conv_1", "conv_2", "conv_3")):
+        assert abs(weight_block_density(w) - by[lp].achieved_density) < 1e-6
+
+
+def test_prune_graph_params_accepts_legacy_layout():
+    from repro.configs.vgg19_sparse import CNNConfig
+    from repro.models.cnn import init_cnn
+
+    ccfg = CNNConfig(name="legacy-tiny", in_channels=8, img_size=8,
+                     plan=((8, 1),), n_classes=4)
+    params = init_cnn(jax.random.PRNGKey(0), ccfg)
+    pruned, rep = prune_graph_params(params, 0.5)
+    assert set(pruned) == {"conv", "dense"}  # normalized to graph-native
+    assert len(pruned["conv"]) == 1 and len(pruned["dense"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# conv2d_bsr vs the dense-on-pruned reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("c,o,hw,k,stride", [(16, 16, 12, 3, 1), (3, 24, 20, 5, 2),
+                                             (8, 8, 9, 3, 1)])
+@pytest.mark.parametrize("density", [1.0, 0.3])
+def test_conv2d_bsr_matches_dense_on_pruned(c, o, hw, k, stride, density):
+    w = jax.random.normal(jax.random.PRNGKey(c * o), (o, c, k, k)) * 0.1
+    mat = np.asarray(conv_weight_matrix(w))
+    pruned, _, _ = prune_matrix(mat, density, weight_block(*mat.shape))
+    w = jnp.asarray(pruned.reshape(w.shape))
+    x = jax.random.normal(jax.random.PRNGKey(hw), (2, c, hw, hw))
+    y = conv2d_bsr(x, w, stride=stride)
+    ref = conv2d_bsr_ref(x, w, stride=stride)
+    assert y.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    # single-image path agrees with its batched row
+    y0 = conv2d_bsr(x[0], w, stride=stride)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y[0]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_conv2d_bsr_fully_pruned_weights_give_zero():
+    w = jnp.zeros((8, 8, 3, 3))
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 10, 10))
+    assert np.abs(np.asarray(conv2d_bsr(x, w))).max() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# registry + cost model
+# ---------------------------------------------------------------------------
+
+
+def test_registry_bsr_op_flags():
+    op = get_op("conv", "bsr")
+    assert op.weight_sparse and op.pallas and not op.sparse
+    assert op.fused_with is None  # no fused-pool variant
+
+
+def test_bsr_cost_scales_with_weight_density_not_occupancy(vgg):
+    graph, _ = vgg
+    unit = graph.units()[0]
+    us = [unit_model_us("conv", "bsr", unit, weight_density=d)
+          for d in (1.0, 0.5, 0.1)]
+    assert us[0] > us[1] > us[2]  # pruning buys modeled time
+    a = unit_model_us("conv", "bsr", unit, occupancy=0.1, weight_density=0.5)
+    b = unit_model_us("conv", "bsr", unit, occupancy=1.0, weight_density=0.5)
+    assert a == b  # activation occupancy buys BSR nothing
+    # density -> 0: BSR undercuts ECR even on a LOW-occupancy layer
+    ecr = unit_model_us("conv", "ecr_pallas", unit, occupancy=0.3)
+    assert unit_model_us("conv", "bsr", unit, weight_density=0.05) < ecr
+
+
+# ---------------------------------------------------------------------------
+# planner impl selection (the joint occupancy x density decision)
+# ---------------------------------------------------------------------------
+
+
+def test_density_one_never_selects_bsr(vgg):
+    graph, params = vgg
+    for th in (0.0, 0.75, 1.0):
+        plan = plan_network(params, _calib(graph), graph, occ_threshold=th,
+                            block_c=8)
+        assert plan.counts()["bsr"] == 0
+        assert all(lp.weight_density == 1.0 for lp in plan.layers)
+
+
+def test_low_density_prefers_bsr_on_low_occupancy_layers(vgg):
+    graph, params = vgg
+    pruned, _ = prune_graph_params(params, 0.3, graph)
+    plan = plan_network(pruned, _calib(graph), graph, block_c=8)
+    bsr = [lp for lp in plan.layers if lp.impl == "bsr"]
+    assert bsr, "density 0.3 must hand at least one layer to BSR"
+    # at least one BSR placement displaced a layer the occupancy rule had
+    # already marked sparse — weight sparsity out-modeled activation sparsity
+    assert any(lp.occupancy <= plan.occ_threshold for lp in bsr)
+    assert all(lp.weight_density <= 0.5 for lp in bsr)
+
+
+def test_bsr_threshold_gates_selection(vgg):
+    graph, params = vgg
+    pruned, _ = prune_graph_params(params, 0.3, graph)
+    plan = plan_network(pruned, _calib(graph), graph, block_c=8,
+                        bsr_threshold=0.0)
+    assert plan.counts()["bsr"] == 0  # gate closed: densities are all > 0
+
+
+def test_validate_plan_rejects_density_mismatch(vgg):
+    graph, params = vgg
+    pruned, _ = prune_graph_params(params, 0.3, graph)
+    plan = plan_network(pruned, _calib(graph), graph, block_c=8)
+    assert plan.counts()["bsr"] > 0
+    calib = _calib(graph, seed=7)
+    run_plan(plan, pruned, calib)  # planned-over params: fine
+    with pytest.raises(ValueError, match="weight block density"):
+        run_plan(plan, params, calib)  # unpruned params under a BSR plan
+
+
+def test_plan_key_distinguishes_pruned_variants(vgg):
+    graph, params = vgg
+    calib = _calib(graph)
+    p03, _ = prune_graph_params(params, 0.3, graph)
+    p01, _ = prune_graph_params(params, 0.1, graph)
+    plan03 = plan_network(p03, calib, graph, block_c=8)
+    plan01 = plan_network(p01, calib, graph, block_c=8)
+    dense_plan = plan_network(params, calib, graph, block_c=8)
+    assert plan_key(4, dense_plan).weight_sig == ()  # pre-BSR keys unchanged
+    k03, k01 = plan_key(4, plan03), plan_key(4, plan01)
+    assert k03.weight_sig and k03 != k01  # two pruned variants never collide
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: pruned model zoo through plan_network -> run_plan -> Engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("model", ["lenet", "alexnet", "vgg19"])
+def test_pruned_model_end_to_end(model):
+    from repro.graph.executor import run_graph
+
+    graph = _graph(model)
+    params = shift_dead_channels(init_graph(jax.random.PRNGKey(0), graph))
+    calib = _calib(graph)
+    pruned, rep = prune_graph_params(params, 0.3, graph)
+    assert rep.density <= 0.55  # coarse block grids quantize, but must prune
+    plan = plan_network(pruned, calib, graph, block_c=8)
+    assert plan.counts()["bsr"] >= 1
+    logits = run_plan(plan, pruned, calib)
+    ref = run_graph(graph, pruned, calib, impl="dense")
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pruned_engine_serve_matches_run_plan(vgg):
+    from repro.serving import Engine
+
+    graph, params = vgg
+    pruned, _ = prune_graph_params(params, 0.3, graph)
+    calib = _calib(graph)
+    eng = Engine(pruned, graph=graph, calib=calib, block_c=8, mesh=None,
+                 max_batch=4)
+    assert eng.plan.counts()["bsr"] >= 1
+    imgs = [np.asarray(calib[i]) for i in range(3)]
+    served = eng.serve(imgs)
+    ref = np.asarray(run_plan(eng.plan, pruned, jnp.stack(
+        [jnp.asarray(i) for i in imgs])))
+    np.testing.assert_allclose(served, ref, rtol=1e-5, atol=1e-5)
+    assert eng.stats()["plan_bsr"] >= 1
