@@ -55,14 +55,17 @@ def serve_replay_point(engine, imgs, rate_rps: float):
     t0 = clock()
     results = replay_stream(engine, imgs, rate_rps=rate_rps)
     makespan = max(clock() - t0, 1e-9)
-    lat_ms = np.array(sorted(r.latency_s for r in results)) * 1e3
     stats = engine.stats()
     point = {
         "rate_rps": rate_rps,
         "throughput_rps": len(results) / makespan,
-        "p50_ms": float(np.percentile(lat_ms, 50)),
-        "p95_ms": float(np.percentile(lat_ms, 95)),
-        "mean_ms": float(lat_ms.mean()),
+        # percentiles come from the engine's MetricsTracker reservoir — fed
+        # per COMPLETED request inside the engine, so flush-tail requests
+        # are aggregated exactly like poll()-completed ones
+        "p50_ms": stats["p50_ms"],
+        "p95_ms": stats["p95_ms"],
+        "p99_ms": stats["p99_ms"],
+        "mean_ms": stats["mean_ms"],
         "batches": stats["batches"],
         "mean_fill": round(stats["mean_fill"], 3),
         "warm_compiles": warm_compiles,

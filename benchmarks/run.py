@@ -11,8 +11,11 @@ attributable point to the perf trajectory instead of scrolling away. The
 serving benchmark (`serve_vgg19`) always writes its own
 BENCH_serve_vgg19.json and is part of the default set; the model-zoo smoke
 (`model_zoo`) runs the reduced LeNet/AlexNet/VGG graphs through the planned
-pipeline, and the weight-sparsity sweep (`sparse_weights`) runs the same
-zoo pruned at each target BSR density through the joint planner.
+pipeline, the weight-sparsity sweep (`sparse_weights`) runs the same
+zoo pruned at each target BSR density through the joint planner, and the
+scenario sweep (`scenarios`) drives regime-diverse traffic — bursts,
+diurnal occupancy drift, hot swap, multi-tenant — through the engine's
+telemetry layer.
 """
 from __future__ import annotations
 
@@ -34,6 +37,7 @@ def main() -> None:
         kernels_micro,
         model_zoo,
         roofline,
+        scenarios,
         serve_sharded,
         serve_vgg19,
         sparse_weights,
@@ -53,6 +57,7 @@ def main() -> None:
         ("zoo", model_zoo),
         ("sparse_weights", sparse_weights),
         ("serve", serve_vgg19),
+        ("scenarios", scenarios),
         # jax is initialized by the imports above, so the sharded sweep sees
         # however many devices the operator's XLA_FLAGS exposed (1 by
         # default — the full 1/2/4 sweep runs in the dedicated CI job)
@@ -70,7 +75,8 @@ def main() -> None:
         if args.only and name != args.only:
             continue
         # these benchmarks write their own (richer) BENCH json; same dir
-        own_json = name in ("serve", "serve_sharded", "sparse_weights")
+        own_json = name in ("serve", "serve_sharded", "sparse_weights",
+                            "scenarios")
         kwargs = {"json_dir": args.json} if (args.json and own_json) else {}
         t0 = time.time()
         if args.json is None:

@@ -1,0 +1,209 @@
+"""Scenario x model serving sweep: regime-diverse traffic through the engine.
+
+Claim checked: the serving stack's ADAPTIVE machinery — occupancy-EMA
+re-planning, the shared plan cache, deadline-bounded bucketing, hot model
+swap — holds up under the traffic regimes it exists for, not just the steady
+rates `serve_vgg19.py` sweeps. One point per (scenario, model):
+
+- ``burst``   — Markov-modulated Poisson arrivals (base/burst rate cycle):
+  the queue must drain whole due buckets, never strand a request;
+- ``diurnal`` — the dead-channel band narrows mid-stream (fig. 3's diurnal
+  sparsity story): the EMA must leave the hysteresis band and re-plan;
+- ``hot_swap`` — the engine swaps to a 0.3-density BSR-pruned variant under
+  load (DESIGN.md §7): both variants' programs coexist in the cache;
+- ``multi_tenant`` — VGG + LeNet streams interleaved over ONE shared
+  PlanCache: compiles stay bounded by the distinct PlanKeys.
+
+Each point carries throughput/latency percentiles (from the engine's
+MetricsTracker reservoir) plus the full telemetry snapshot — including the
+per-layer occupancy-EMA timeline and the re-plan event log — so
+BENCH_scenarios.json is a time series of how the engine adapted, not just a
+scalar summary.
+
+Run: PYTHONPATH=src:. python benchmarks/scenarios.py [--reduced] [--json DIR]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._util import write_bench_json
+from repro.configs.lenet import LENET_REDUCED
+from repro.configs.vgg19_sparse import CNNConfig, vgg19_graph
+from repro.graph import init_graph
+from repro.serving import (
+    DiurnalDriftScenario,
+    Engine,
+    HotSwapScenario,
+    MultiTenantScenario,
+    PlanCache,
+    PoissonBurstScenario,
+    SimClock,
+    TenantSpec,
+    replay_scenario,
+    synth_image,
+)
+
+DEAD_FRAC = 0.5  # the steady regime's dead-channel band (occ ~0.5 at entry)
+
+
+def _vgg_tiny():
+    return vgg19_graph(CNNConfig(name="vgg-tiny", in_channels=16, img_size=16,
+                                 plan=((16, 1), (32, 1)), n_classes=16))
+
+
+MODELS = {"vgg19": _vgg_tiny, "lenet": lambda: LENET_REDUCED}
+
+
+def _engine(graph, *, clock, cache=None, seed=0, occ_threshold=0.75,
+            max_batch=4, deadline_s=0.005):
+    """One scenario engine: planned on the steady DEAD_FRAC regime, with a
+    snappy drift detector (alpha=0.5, cooldown=0) so the reduced-scale
+    streams are long enough to show a re-plan."""
+    params = init_graph(jax.random.PRNGKey(seed), graph)
+    calib = jnp.stack([synth_image(graph.in_shape, seed + 1, i, DEAD_FRAC)
+                       for i in range(2)])
+    return Engine(params, graph=graph, calib=calib,
+                  occ_threshold=occ_threshold, block_c=8, max_batch=max_batch,
+                  deadline_s=deadline_s, clock=clock, cache=cache,
+                  ema_alpha=0.5, replan_band=0.15, replan_cooldown=0)
+
+
+def _point(scenario_name, model_name, engines, results, makespan):
+    """Merge one replay into a BENCH point: throughput over the simulated
+    makespan, latency percentiles from the trackers' reservoirs, adaptation
+    counters, and the full telemetry snapshot(s) as the time series."""
+    n = sum(len(v) for v in results.values())
+    stats = {k: e.stats() for k, e in engines.items()}
+    any_cache = next(iter(engines.values())).cache
+    lat = [s["telemetry"]["latency"] for s in stats.values()]
+    weight = [s["lat_count"] for s in stats.values()]
+    tot = max(sum(weight), 1)
+    point = {
+        "scenario": scenario_name,
+        "model": model_name,
+        "requests": n,
+        "throughput_rps": n / max(makespan, 1e-9),
+        # single-stream points report the reservoir percentiles verbatim;
+        # multi-tenant merges per-stream percentiles count-weighted (the
+        # per-stream exact values ride in "telemetry")
+        "p50_ms": sum(lt["p50_ms"] * w for lt, w in zip(lat, weight)) / tot,
+        "p95_ms": sum(lt["p95_ms"] * w for lt, w in zip(lat, weight)) / tot,
+        "p99_ms": sum(lt["p99_ms"] * w for lt, w in zip(lat, weight)) / tot,
+        "mean_ms": sum(lt["mean_ms"] * w for lt, w in zip(lat, weight)) / tot,
+        "batches": sum(s["batches"] for s in stats.values()),
+        "mean_fill": sum(s["mean_fill"] * s["batches"] for s in stats.values())
+        / max(sum(s["batches"] for s in stats.values()), 1),
+        "replans": sum(s["replans"] for s in stats.values()),
+        "replan_errors": sum(s["replan_errors"] for s in stats.values()),
+        "hot_swaps": sum(s["hot_swaps"] for s in stats.values()),
+        "cache": any_cache.stats(),
+        "telemetry": {k: s["telemetry"] for k, s in stats.items()}
+        if len(stats) > 1 else stats[next(iter(stats))]["telemetry"],
+    }
+    return point
+
+
+def _run(scenario_name, model_name, engines, scenario):
+    clock = next(iter(engines.values())).clock
+    for e in engines.values():
+        e.warmup()
+    t0 = clock()
+    results = replay_scenario(engines, scenario)
+    return _point(scenario_name, model_name, engines, results, clock() - t0)
+
+
+def sweep(n_requests: int = 16, seed: int = 0):
+    points = []
+    for model_name, build in MODELS.items():
+        graph = build()
+        shape = graph.in_shape
+
+        clock = SimClock()
+        eng = _engine(graph, clock=clock, seed=seed)
+        points.append(_run("burst", model_name, {"": eng},
+                           PoissonBurstScenario(
+                               in_shape=shape, n_requests=n_requests,
+                               base_rps=50.0, burst_rps=800.0,
+                               burst_every_s=0.1, burst_len_s=0.03,
+                               dead_frac=DEAD_FRAC, seed=seed)))
+
+        clock = SimClock()
+        eng = _engine(graph, clock=clock, seed=seed)
+        points.append(_run("diurnal", model_name, {"": eng},
+                           DiurnalDriftScenario(
+                               in_shape=shape, n_requests=n_requests,
+                               rate_rps=200.0, dead_lo=DEAD_FRAC, dead_hi=0.0,
+                               drift="step", t_drift=n_requests / 400.0,
+                               seed=seed)))
+
+        clock = SimClock()
+        eng = _engine(graph, clock=clock, seed=seed)
+        from repro.sparse_weights import prune_graph_params
+
+        pruned, report = prune_graph_params(eng.params, 0.3, graph)
+
+        def swap(engines, _pruned=pruned):
+            engines[""].hot_swap(_pruned)
+
+        pt = _run("hot_swap", model_name, {"": eng},
+                  HotSwapScenario(in_shape=shape, n_requests=n_requests,
+                                  rate_rps=200.0,
+                                  t_swap=n_requests / 400.0, swap_fn=swap,
+                                  dead_frac=DEAD_FRAC, seed=seed))
+        pt["pruned_density"] = report.density
+        points.append(pt)
+
+    # multi-tenant: both models share ONE PlanCache and one timeline
+    clock = SimClock()
+    cache = PlanCache(max_entries=32)
+    engines, tenants = {}, []
+    for model_name, build in MODELS.items():
+        graph = build()
+        engines[model_name] = _engine(graph, clock=clock, cache=cache,
+                                      seed=seed)
+        tenants.append((model_name,
+                        TenantSpec(in_shape=graph.in_shape,
+                                   n_requests=n_requests // 2,
+                                   rate_rps=100.0, dead_frac=DEAD_FRAC)))
+    points.append(_run("multi_tenant", "+".join(MODELS), engines,
+                       MultiTenantScenario(tenants=tuple(tenants), seed=seed)))
+    return points
+
+
+def main(reduced: bool = True, json_dir: str = ".",
+         n_requests: int | None = None) -> str:
+    n_requests = n_requests or (16 if reduced else 64)
+    points = sweep(n_requests=n_requests)
+    rows = []
+    for p in points:
+        rows.append({
+            "name": f"scenarios/{p['scenario']}/{p['model']}",
+            "us_per_call": p["mean_ms"] * 1e3,
+            "derived": (f"throughput_rps={p['throughput_rps']:.1f} "
+                        f"p50_ms={p['p50_ms']:.2f} p99_ms={p['p99_ms']:.2f} "
+                        f"replans={p['replans']} hot_swaps={p['hot_swaps']} "
+                        f"compiles={p['cache']['compiles']}"),
+            **{k: v for k, v in p.items() if k != "telemetry"},
+        })
+        print(f"{rows[-1]['name']},{rows[-1]['us_per_call']:.1f},"
+              f"{rows[-1]['derived']}")
+    path = write_bench_json("scenarios", rows, json_dir, extra={
+        "config": {"n_requests": n_requests, "reduced": reduced,
+                   "models": list(MODELS)},
+        "points": points,
+    })
+    print(f"_meta/scenarios_json,0,wrote {path}")
+    return path
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CI-smoke scale (the default)")
+    ap.add_argument("--json", default=".", metavar="DIR",
+                    help="directory for BENCH_scenarios.json")
+    args = ap.parse_args()
+    main(reduced=True, json_dir=args.json)

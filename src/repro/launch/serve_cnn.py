@@ -16,6 +16,11 @@ Data-parallel over 4 virtual CPU devices (DESIGN.md §6):
         PYTHONPATH=src python -m repro.launch.serve_cnn --devices 4
 Pruned-model serving (weight sparsity, DESIGN.md §7):
     PYTHONPATH=src python -m repro.launch.serve_cnn --prune-density 0.3
+Traffic scenarios (telemetry + scenario library, DESIGN.md §8):
+    PYTHONPATH=src python -m repro.launch.serve_cnn --scenario burst
+    PYTHONPATH=src python -m repro.launch.serve_cnn --scenario diurnal
+    PYTHONPATH=src python -m repro.launch.serve_cnn --scenario hotswap
+    PYTHONPATH=src python -m repro.launch.serve_cnn --scenario multitenant
 """
 from __future__ import annotations
 
@@ -35,6 +40,7 @@ from repro.serving import Engine, SimClock, auto_mesh, autotune, replay_stream
 log = logging.getLogger("repro.serve_cnn")
 
 MODELS = ("vgg19", "lenet", "alexnet")
+SCENARIOS = ("steady", "burst", "diurnal", "hotswap", "multitenant")
 
 
 def serving_graph(model: str = "vgg19", full: bool = False) -> LayerGraph:
@@ -71,13 +77,79 @@ def synth_requests(graph, n: int, seed: int = 0, dead_frac: float = 0.5):
         dead_frac) for i in range(n)]
 
 
+def _scenario_setup(scenario, model, engine, *, n_requests, rate, seed):
+    """The non-steady traffic regimes (DESIGN.md §8): returns the scenario
+    plus the {stream: Engine} map `replay_scenario` drives. All regimes are
+    timed off the stream's midpoint so the interesting event (burst cycle,
+    drift onset, swap) lands while requests are still flowing."""
+    from repro.serving import (
+        DiurnalDriftScenario,
+        HotSwapScenario,
+        MultiTenantScenario,
+        PoissonBurstScenario,
+        TenantSpec,
+    )
+
+    shape = engine.graph.in_shape
+    t_mid = n_requests / (2.0 * rate)
+    if scenario == "burst":
+        return PoissonBurstScenario(
+            in_shape=shape, n_requests=n_requests, base_rps=rate,
+            burst_rps=rate * 16, burst_every_s=t_mid,
+            burst_len_s=t_mid / 4, seed=seed), {"": engine}
+    if scenario == "diurnal":
+        return DiurnalDriftScenario(
+            in_shape=shape, n_requests=n_requests, rate_rps=rate,
+            dead_lo=0.5, dead_hi=0.0, drift="step", t_drift=t_mid,
+            seed=seed), {"": engine}
+    if scenario == "hotswap":
+        from repro.sparse_weights import prune_graph_params
+
+        pruned, report = prune_graph_params(engine.params, 0.3, engine.graph)
+        log.info("hot-swap variant: pruned to %.2f achieved block density",
+                 report.density)
+
+        def swap(engines):
+            engines[""].hot_swap(pruned)
+
+        return HotSwapScenario(
+            in_shape=shape, n_requests=n_requests, rate_rps=rate,
+            t_swap=t_mid, swap_fn=swap, seed=seed), {"": engine}
+    if scenario == "multitenant":
+        other = "lenet" if model != "lenet" else "vgg19"
+        graph2 = serving_graph(other)
+        params2 = shift_dead_channels(init_graph(jax.random.PRNGKey(seed + 1),
+                                                 graph2))
+        calib2 = jnp.stack(synth_requests(graph2, 2, seed=seed + 3))
+        # the second tenant shares the first's clock AND PlanCache — the
+        # PlanKey graph/weight signatures keep the programs from colliding
+        engine2 = Engine(params2, graph=graph2, calib=calib2,
+                         occ_threshold=engine.plan.occ_threshold,
+                         block_c=engine.plan.block_c,
+                         max_batch=engine.batcher.max_batch,
+                         deadline_s=engine.batcher.deadline_s,
+                         clock=engine.clock, cache=engine.cache,
+                         mesh=engine.mesh)
+        engine2.warmup()
+        tenants = ((model, TenantSpec(in_shape=shape,
+                                      n_requests=n_requests // 2,
+                                      rate_rps=rate)),
+                   (other, TenantSpec(in_shape=graph2.in_shape,
+                                      n_requests=n_requests // 2,
+                                      rate_rps=rate)))
+        return MultiTenantScenario(tenants=tenants, seed=seed), \
+            {model: engine, other: engine2}
+    raise ValueError(f"unknown --scenario {scenario!r} "
+                     f"(choose from {SCENARIOS})")
+
+
 def serve_cnn(*, model: str = "vgg19", full: bool = False,
               n_requests: int = 24, rate: float = 50.0,
               max_batch: int = 8, deadline_ms: float = 10.0,
               occ_threshold: float = 0.75, block_c: int = 8,
               do_autotune: bool = False, replan_band: float = 0.15,
               devices: int = 0, prune_density: float = 1.0,
-              seed: int = 0) -> dict:
+              scenario: str = "steady", seed: int = 0) -> dict:
     graph = serving_graph(model, full)
     params = shift_dead_channels(init_graph(jax.random.PRNGKey(seed), graph))
     # --devices 0 degrades like the Engine's auto policy (largest local
@@ -116,13 +188,24 @@ def serve_cnn(*, model: str = "vgg19", full: bool = False,
              engine.batcher.exec_buckets(), engine.n_devices)
 
     t_start = clock()
-    results = replay_stream(engine, synth_requests(graph, n_requests, seed=seed + 2),
-                            rate_rps=rate)
+    if scenario == "steady":
+        results = replay_stream(engine,
+                                synth_requests(graph, n_requests, seed=seed + 2),
+                                rate_rps=rate)
+    else:
+        from repro.serving import replay_scenario
+
+        scn, engines = _scenario_setup(scenario, model, engine,
+                                       n_requests=n_requests, rate=rate,
+                                       seed=seed)
+        results = [r for out in replay_scenario(engines, scn).values()
+                   for r in out]
     makespan = clock() - t_start
     lat_ms = np.array(sorted(r.latency_s for r in results)) * 1e3
     stats = engine.stats()
     summary = {
         "model": graph.name,
+        "scenario": scenario,
         "devices": engine.n_devices,
         "prune_density": achieved_density,
         "plan_bsr": stats["plan_bsr"],
@@ -132,15 +215,16 @@ def serve_cnn(*, model: str = "vgg19", full: bool = False,
         "p50_ms": float(np.percentile(lat_ms, 50)),
         "p95_ms": float(np.percentile(lat_ms, 95)),
         "mean_fill": stats["mean_fill"],
-        **{k: stats[k] for k in ("batches", "compiles", "hits", "replans")},
+        **{k: stats[k] for k in ("batches", "compiles", "hits", "replans",
+                                 "hot_swaps")},
     }
-    log.info("served %d requests at %.0f req/s offered: %.1f req/s, "
-             "p50=%.1fms p95=%.1fms, %d batches (fill %.2f), "
-             "%d compiles / %d cache hits, %d replans",
-             summary["requests"], rate, summary["throughput_rps"],
+    log.info("served %d requests (%s traffic) at %.0f req/s offered: "
+             "%.1f req/s, p50=%.1fms p95=%.1fms, %d batches (fill %.2f), "
+             "%d compiles / %d cache hits, %d replans, %d hot swaps",
+             summary["requests"], scenario, rate, summary["throughput_rps"],
              summary["p50_ms"], summary["p95_ms"], summary["batches"],
              summary["mean_fill"], summary["compiles"], summary["hits"],
-             summary["replans"])
+             summary["replans"], summary["hot_swaps"])
     return summary
 
 
@@ -171,6 +255,12 @@ def main():
                          "density before planning (1.0 = no pruning); the "
                          "planner then places ('conv','bsr') layers wherever "
                          "weight sparsity beats activation sparsity")
+    ap.add_argument("--scenario", choices=SCENARIOS, default="steady",
+                    help="traffic regime (DESIGN.md §8): steady open-loop "
+                         "stream (default), Poisson bursts, diurnal "
+                         "occupancy drift (forces a re-plan), hot swap to a "
+                         "0.3-density pruned variant mid-stream, or two "
+                         "models multi-tenant over one shared plan cache")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve_cnn(model=args.model, full=args.full, n_requests=args.n_requests,
@@ -178,7 +268,8 @@ def main():
               deadline_ms=args.deadline_ms, occ_threshold=args.occ_threshold,
               block_c=args.block_c, do_autotune=args.autotune,
               replan_band=args.replan_band, devices=args.devices,
-              prune_density=args.prune_density, seed=args.seed)
+              prune_density=args.prune_density, scenario=args.scenario,
+              seed=args.seed)
 
 
 if __name__ == "__main__":

@@ -12,9 +12,19 @@ with a cost-model fallback for noisy clocks. With more than one local device
 the engine serves data-parallel over a 1-D "data" mesh (shard_map, device-
 aligned buckets, cross-shard occupancy aggregation — DESIGN.md §6).
 
-Entry points: `launch/serve_cnn.py` (CLI, `--devices`),
+Telemetry and traffic realism (DESIGN.md §8): every engine feeds a
+`MetricsTracker` (latency reservoir, per-bucket counts, occupancy-EMA
+timeline, re-plan events) whose deterministic `snapshot()` rides in
+`Engine.stats()["telemetry"]`, and `scenarios` supplies regime-diverse
+seeded traffic — Poisson bursts, diurnal occupancy drift, multi-tenant
+streams over one shared `PlanCache`, hot-swap to a pruned variant under
+load — replayed by `replay_scenario` (of which `replay_stream` is the
+steady-rate special case).
+
+Entry points: `launch/serve_cnn.py` (CLI, `--devices`, `--scenario`),
 `benchmarks/serve_vgg19.py` (request-rate sweep),
 `benchmarks/serve_sharded.py` (device-count x rate sweep),
+`benchmarks/scenarios.py` (scenario x model sweep),
 `examples/vgg19_server.py` (walkthrough).
 """
 from repro.serving.autotune import (
@@ -32,24 +42,49 @@ from repro.serving.batcher import (
     bucket_sizes,
 )
 from repro.serving.engine import Engine, ServedResult, auto_mesh, replay_stream
+from repro.serving.metrics import LatencyReservoir, MetricsTracker
 from repro.serving.plan_cache import PlanCache, PlanKey, plan_key
+from repro.serving.scenarios import (
+    DiurnalDriftScenario,
+    HotSwapScenario,
+    ListScenario,
+    MultiTenantScenario,
+    PoissonBurstScenario,
+    Scenario,
+    ScenarioRequest,
+    TenantSpec,
+    replay_scenario,
+    synth_image,
+)
 
 __all__ = [
     "AutotuneResult",
     "Candidate",
+    "DiurnalDriftScenario",
     "Engine",
+    "HotSwapScenario",
+    "LatencyReservoir",
+    "ListScenario",
+    "MetricsTracker",
     "MicroBatch",
     "MicroBatcher",
+    "MultiTenantScenario",
     "PlanCache",
     "PlanKey",
+    "PoissonBurstScenario",
     "Request",
+    "Scenario",
+    "ScenarioRequest",
     "ServedResult",
     "SimClock",
+    "TenantSpec",
     "auto_mesh",
     "autotune",
     "bucket_sizes",
     "hlo_model_us",
     "plan_key",
     "plan_model_us",
+    "replay_scenario",
     "replay_stream",
+    "synth_image",
 ]

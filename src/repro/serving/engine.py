@@ -38,17 +38,22 @@ from repro.graph import as_graph
 from repro.parallel.api import data_mesh, sharding_for
 from repro.pipeline.planner import PipelinePlan, plan_network, run_plan, run_plan_sharded
 from repro.serving.batcher import MicroBatch, MicroBatcher, SimClock
+from repro.serving.metrics import MetricsTracker
 from repro.serving.plan_cache import PlanCache, plan_key
 
 
 @dataclass(frozen=True)
 class ServedResult:
-    """One completed request: logits plus the latency-accounting timestamps."""
+    """One completed request: logits plus the latency-accounting timestamps.
+    `t_formed` is when the batcher formed the request's bucket — the deadline
+    contract bounds (t_formed - t_arrival), and the burst scenario tests pin
+    it; pre-existing constructors that omit it get 0.0."""
 
     id: int
     logits: np.ndarray  # (n_classes,)
     t_arrival: float
     t_done: float
+    t_formed: float = 0.0
 
     @property
     def latency_s(self) -> float:
@@ -116,7 +121,9 @@ class Engine:
                  clock=time.monotonic, mesh="auto",
                  ema_alpha: float = 0.25, replan_band: float = 0.15,
                  replan_cooldown: int = 2, replan_async: bool = False,
-                 cache_entries: int = 32):
+                 cache_entries: int = 32, cache: PlanCache | None = None,
+                 metrics: MetricsTracker | None = None,
+                 sim_service_s=None):
         graph = plan.graph if plan is not None and plan.graph is not None \
             else as_graph(graph if graph is not None else ccfg)
         if plan is None:
@@ -147,7 +154,16 @@ class Engine:
         self.batcher = MicroBatcher(max_batch=max_batch, deadline_s=deadline_s,
                                     clock=clock, min_bucket=min_bucket,
                                     align=self.n_devices)
-        self.cache = PlanCache(max_entries=cache_entries)
+        # cache= shares one PlanCache across engines (multi-tenant serving);
+        # the graph/mesh/weight signatures in PlanKey keep tenants from ever
+        # colliding on a compiled program
+        self.cache = cache if cache is not None else PlanCache(max_entries=cache_entries)
+        self.metrics = metrics if metrics is not None else MetricsTracker()
+        # sim_service_s: deterministic service-time model for SimClock replays
+        # (None = charge measured wall time; a float or callable(bucket,
+        # n_real) -> seconds makes two identical replays — logits AND metric
+        # snapshots — bit-identical, the regression-diff contract)
+        self.sim_service_s = sim_service_s
         self.ema_alpha = ema_alpha
         self.replan_band = replan_band
         self.replan_cooldown = replan_cooldown
@@ -156,11 +172,13 @@ class Engine:
         self._pending_plan: PipelinePlan | None = None
         self._replanning = False
         self._replan_thread: threading.Thread | None = None
-        self._cooldown = 0
+        self._plan_gen = 0  # bumped by hot_swap: stale background re-plans
+        self._cooldown = 0  # (planned against the swapped-out params) drop
         self._calib_recent = None  # last real (unpadded) executed batch
         self._occ_ema = np.array([lp.occupancy for lp in plan.layers])
         self.n_replans = 0
         self.replan_errors = 0
+        self.n_hot_swaps = 0
         self.n_batches = 0
         self.n_requests = 0
         self.n_pad_samples = 0
@@ -177,7 +195,9 @@ class Engine:
         advanced the simulated timeline past it (the queueing delay behind an
         executing batch must count against latency and the deadline)."""
         self.n_requests += 1
-        return self.batcher.submit(jnp.asarray(img, jnp.float32), now=now)
+        rid = self.batcher.submit(jnp.asarray(img, jnp.float32), now=now)
+        self.metrics.on_submit(self.clock() if now is None else now)
+        return rid
 
     def next_deadline(self) -> float | None:
         """Absolute time the driver must poll by (batcher deadline contract)."""
@@ -230,6 +250,15 @@ class Engine:
         return self.cache.compiles - before
 
     def stats(self) -> dict:
+        """Serving state + telemetry. Latency percentiles come from the
+        tracker's reservoir — fed per COMPLETED request in `_run_batch`, so
+        drain()/flush-tail requests are aggregated exactly like
+        poll()-completed ones (they used to escape latency accounting
+        entirely: latency was only ever computed by external drivers over
+        whatever subset of results they kept). The full time-series
+        telemetry (occupancy-EMA timeline, re-plan events, per-bucket
+        counts) rides under ``"telemetry"`` — `MetricsTracker.snapshot()`
+        verbatim, ready for `write_bench_json`."""
         c = self.plan.counts()
         return {
             **self.cache.stats(),
@@ -240,10 +269,15 @@ class Engine:
             "mean_fill": self._fill_sum / max(self.n_batches, 1),
             "replans": self.n_replans,
             "replan_errors": self.replan_errors,
+            "hot_swaps": self.n_hot_swaps,
             "plan_sparse": c["sparse"],
             "plan_dense": c["dense"],
             "plan_bsr": c["bsr"],
             "occ_ema": [float(v) for v in np.round(self._occ_ema, 4)],
+            **{k: v for k, v in self.metrics.latency.percentiles_ms().items()
+               if k != "count"},
+            "lat_count": self.metrics.latency.count,
+            "telemetry": self.metrics.snapshot(),
         }
 
     # ------------------------------------------------------------------
@@ -292,8 +326,17 @@ class Engine:
         logits, occs = exe(self.params, imgs, jnp.asarray(batch.n_real, jnp.int32))
         jax.block_until_ready(logits)
         wall = time.perf_counter() - t0
+        # the time CHARGED to the timeline: measured wall by default, or the
+        # deterministic sim_service_s model (fixed or per-bucket) so seeded
+        # SimClock replays are bit-identical end to end
+        if self.sim_service_s is None:
+            dt = wall
+        elif callable(self.sim_service_s):
+            dt = float(self.sim_service_s(batch.bucket, batch.n_real))
+        else:
+            dt = float(self.sim_service_s)
         if isinstance(self.clock, SimClock):
-            self.clock.advance(wall)  # charge real service time to the sim timeline
+            self.clock.advance(dt)  # charge service time to the sim timeline
         t_done = self.clock()
         logits = np.asarray(logits)
         self.n_batches += 1
@@ -301,8 +344,11 @@ class Engine:
         self._fill_sum += batch.fill
         self._calib_recent = imgs[: batch.n_real]
         results = [ServedResult(id=r.id, logits=logits[i], t_arrival=r.t_arrival,
-                                t_done=t_done)
+                                t_done=t_done, t_formed=batch.t_formed)
                    for i, r in enumerate(batch.requests)]
+        self.metrics.on_batch(t_done, batch.bucket, batch.n_real, dt)
+        for r in results:
+            self.metrics.on_result(r.latency_s)
         self._observe(np.asarray(occs))  # after results exist: a re-plan
         return results                   # failure must not drop served work
 
@@ -313,13 +359,16 @@ class Engine:
     def _observe(self, occs: np.ndarray) -> None:
         a = self.ema_alpha
         self._occ_ema = (1.0 - a) * self._occ_ema + a * occs
+        self.metrics.on_occupancy(self.clock(), self._occ_ema)
         if self._cooldown > 0:
             self._cooldown -= 1
             return
         if self._replanning:
             return
         planned = np.array([lp.occupancy for lp in self.plan.layers])
-        if float(np.abs(self._occ_ema - planned).max()) > self.replan_band:
+        delta = float(np.abs(self._occ_ema - planned).max())
+        if delta > self.replan_band:
+            self.metrics.on_replan_trigger(self.clock(), delta)
             self._launch_replan()
 
     def _launch_replan(self) -> None:
@@ -328,6 +377,7 @@ class Engine:
             return
         self._replanning = True
         plan = self.plan
+        gen = self._plan_gen
 
         def work():
             try:
@@ -342,9 +392,17 @@ class Engine:
                 with self._lock:
                     self._replanning = False
                     self.replan_errors += 1
+                self.metrics.on_replan_error(self.clock())
                 return
             with self._lock:
-                self._pending_plan = new
+                if gen == self._plan_gen:
+                    self._pending_plan = new
+                else:
+                    # a hot_swap landed while this re-plan was in flight: the
+                    # result was planned against the swapped-out params, so
+                    # adopting it would serve the OLD model's schedule on the
+                    # new params — drop it and unblock the drift detector
+                    self._replanning = False
 
         if self.replan_async:
             self._replan_thread = threading.Thread(target=work, daemon=True)
@@ -362,11 +420,49 @@ class Engine:
                 return
             new, self._pending_plan = self._pending_plan, None
         self._replanning = False
-        if plan_key(0, new) != plan_key(0, self.plan):
+        changed = plan_key(0, new) != plan_key(0, self.plan)
+        if changed:
             self.n_replans += 1  # schedule changed; same-key swaps only re-center
         self.plan = new
         self._occ_ema = np.array([lp.occupancy for lp in new.layers])
         self._cooldown = self.replan_cooldown
+        self.metrics.on_replan_swap(self.clock(), changed)
+
+    def hot_swap(self, params, *, plan: PipelinePlan | None = None,
+                 calib=None) -> None:
+        """Swap the SERVED MODEL under load — canonically to a
+        differently-pruned BSR variant of the same graph (DESIGN.md §7: the
+        weight signature in `PlanKey` keeps both variants' programs resident
+        side by side, so swapping back and forth never recompiles a warm
+        bucket). The swap is atomic between batches exactly like a re-plan
+        adoption: callers drive it from the scenario event loop (or any
+        other point outside `poll()`/`serve()`), never mid-execution.
+
+        `plan` pins the new schedule; otherwise the new params are planned on
+        `calib` (default: the most recent real batch) at the current plan's
+        occ_threshold/block_c. An in-flight background re-plan belongs to the
+        OLD params — the generation bump makes its eventual result drop on
+        arrival instead of clobbering the swapped-in model."""
+        if plan is None:
+            calib = self._calib_recent if calib is None else calib
+            if calib is None:
+                raise ValueError("hot_swap needs plan= or calib= before the "
+                                 "engine has executed its first batch")
+            plan = plan_network(params, calib, self.graph,
+                                occ_threshold=self.plan.occ_threshold,
+                                block_c=self.plan.block_c,
+                                use_pallas=self.use_pallas)
+        with self._lock:
+            self._plan_gen += 1
+            self._pending_plan = None
+        self.params = params
+        self.plan = plan
+        if plan.graph is not None:
+            self.graph = plan.graph
+        self._occ_ema = np.array([lp.occupancy for lp in plan.layers])
+        self._cooldown = self.replan_cooldown
+        self.n_hot_swaps += 1
+        self.metrics.on_hot_swap(self.clock())
 
     def join_replan(self, timeout: float | None = 10.0) -> None:
         """Test/shutdown helper: wait for an in-flight background re-plan."""
@@ -380,47 +476,21 @@ def replay_stream(engine: Engine, imgs, rate_rps: float,
     """Drive the engine's event loop over a deterministic open-loop request
     stream on a `SimClock`: images arrive at `rate_rps` (or at the explicit
     `arrivals` timestamps), the clock jumps to the next event (arrival or
-    batcher deadline), and measured execution wall time is charged into the
-    simulated timeline by the engine. Returns all `ServedResult`s.
+    batcher deadline), and the engine charges service time into the
+    simulated timeline (measured wall, or its `sim_service_s` model).
+    Returns all `ServedResult`s.
 
-    This is the shared driver of the serving benchmark, the CLI, and the
-    deadline tests — the engine's clock must be a SimClock.
+    Thin wrapper over `repro.serving.scenarios.replay_scenario` — the
+    steady-rate stream is just the degenerate single-stream `ListScenario`.
+    The engine's clock must be a SimClock.
     """
+    from repro.serving.scenarios import ListScenario, replay_scenario
+
     clock = engine.clock
     if not isinstance(clock, SimClock):
         raise ValueError("replay_stream needs an Engine built on a SimClock")
     if arrivals is None:
         t0 = clock()
         arrivals = [t0 + i / rate_rps for i in range(len(imgs))]
-    results = []
-    i = 0
-    n = len(imgs)
-
-    def submit_due():
-        """Enqueue EVERY arrival at or before the current sim time: when
-        execution advanced the clock past several scheduled arrivals, the
-        whole backlog must be queued before the next poll so it coalesces
-        into full buckets (a one-at-a-time submit would serve overload as
-        singleton batches and misreport fill/throughput)."""
-        nonlocal i
-        while i < n and arrivals[i] <= clock():
-            engine.submit(imgs[i], now=arrivals[i])
-            i += 1
-
-    while len(results) < n:
-        submit_due()
-        while True:
-            out = engine.poll()
-            if not out:
-                break
-            results.extend(out)
-            submit_due()  # execution moved the clock: pick up new backlog
-        if len(results) >= n:
-            break
-        t_arr = arrivals[i] if i < n else None
-        t_dl = engine.next_deadline()
-        if t_arr is not None and (t_dl is None or t_arr <= t_dl):
-            clock.set(t_arr)
-        elif t_dl is not None:
-            clock.set(t_dl)
-    return results
+    scenario = ListScenario(imgs=tuple(imgs), arrivals=tuple(arrivals))
+    return replay_scenario(engine, scenario)[""]

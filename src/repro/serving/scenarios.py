@@ -1,0 +1,340 @@
+"""Scenario library + replay driver: regime-diverse traffic for the engine.
+
+Every serving benchmark before this module swept STEADY request rates, but
+the engine's occupancy-EMA re-planner exists precisely for *shifting*
+traffic (the paper's Fig. 3 diurnal-sparsity story; Shi & Chu show ReLU
+sparsity moves per layer and per input). A `Scenario` is a deterministic,
+seeded description of one traffic regime — arrival times plus a per-request
+image source, all driven on the engine's `SimClock` — so re-plan quality,
+cache behavior, and deadline handling become regression-testable per regime
+instead of anecdotal.
+
+Concrete regimes:
+
+- `PoissonBurstScenario` — Poisson arrivals whose rate switches between a
+  base and a burst level on a fixed cycle (the overload case the batcher's
+  drain-every-due-bucket poll loop exists for);
+- `DiurnalDriftScenario` — steady arrivals whose dead-channel band widens or
+  narrows over simulated time (step or sinusoidal "hours"), the regime that
+  must push the occupancy EMA out of the hysteresis band and re-plan;
+- `MultiTenantScenario` — interleaved streams for several models sharing one
+  `PlanCache` (the graph/weight signatures in `PlanKey` must keep tenants
+  from ever cross-contaminating compiled programs);
+- `HotSwapScenario` — a steady stream with a timed event that swaps the
+  engine to a differently-pruned BSR variant under load
+  (`Engine.hot_swap`, atomic between batches).
+
+`replay_scenario` generalizes `replay_stream` (now a thin wrapper in
+`engine.py`): it merges scenario arrivals, scenario events, and every
+engine's batcher deadline into one deterministic event loop on a shared
+`SimClock`. tests/test_scenarios.py pins per-regime behavior;
+benchmarks/scenarios.py sweeps scenario x model into BENCH_scenarios.json.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+
+import jax
+
+from repro.core import dead_channel_band
+from repro.serving.batcher import SimClock
+
+
+def synth_image(in_shape, seed: int, i: int, dead_frac: float = 0.5):
+    """The i-th request image of a seeded stream: uniform (C,H,W) with the
+    TRAILING `dead_frac` channel band zeroed (the deterministic shared
+    dead-channel band the serving stack's exactness contract rides on —
+    DESIGN.md §2.2/§4). Pure function of (seed, i, dead_frac)."""
+    img = jax.random.uniform(jax.random.PRNGKey(seed * 1000003 + i), in_shape)
+    return dead_channel_band(img, dead_frac)
+
+
+@dataclass(frozen=True)
+class ScenarioRequest:
+    """One scheduled request: arrival time, image, and the tenant stream it
+    targets ("" = the scenario's only stream)."""
+
+    t: float
+    img: object
+    stream: str = ""
+
+
+class Scenario:
+    """Protocol every scenario implements (duck-typed; subclassing is just
+    documentation):
+
+    - ``name`` — regime label (benchmark row / BENCH key);
+    - ``requests()`` — the full request list, ordered by arrival time; must
+      be a pure function of the scenario's constructor arguments (seeded
+      PRNGs only) so identical scenarios replay bit-identically;
+    - ``events`` — ((t, fn), ...) timed actions; ``fn(engines)`` runs once
+      when the simulated clock first reaches ``t`` (between batches, never
+      mid-execution — the driver only fires events at poll boundaries).
+    """
+
+    name: str = "scenario"
+    events: tuple = ()
+
+    def requests(self) -> list:
+        raise NotImplementedError
+
+    def streams(self) -> tuple:
+        """The distinct stream keys, in first-appearance order."""
+        seen: dict = {}
+        for r in self.requests():
+            seen.setdefault(r.stream, None)
+        return tuple(seen)
+
+
+@dataclass(frozen=True)
+class ListScenario(Scenario):
+    """Explicit (arrival, image) lists — the degenerate scenario
+    `replay_stream` wraps, and the escape hatch for hand-built tests."""
+
+    imgs: tuple = ()
+    arrivals: tuple = ()
+    name: str = "list"
+    stream: str = ""
+
+    def __post_init__(self):
+        if len(self.imgs) != len(self.arrivals):
+            raise ValueError(
+                f"ListScenario needs one arrival per image, got "
+                f"{len(self.imgs)} images / {len(self.arrivals)} arrivals")
+
+    def requests(self) -> list:
+        return [ScenarioRequest(t=float(t), img=img, stream=self.stream)
+                for t, img in sorted(zip(self.arrivals, self.imgs),
+                                     key=lambda p: p[0])]
+
+
+@dataclass(frozen=True)
+class PoissonBurstScenario(Scenario):
+    """Markov-modulated Poisson arrivals: exponential interarrivals at
+    `base_rps`, switching to `burst_rps` for the first `burst_len_s` of every
+    `burst_every_s` cycle. The bursty regime overfills buckets (a burst
+    queues several full max_batch buckets at once), so it pins the
+    no-stranding property: every request is formed within its deadline plus
+    the backlog of earlier due buckets."""
+
+    in_shape: tuple = (16, 12, 12)
+    n_requests: int = 32
+    base_rps: float = 50.0
+    burst_rps: float = 800.0
+    burst_every_s: float = 0.25
+    burst_len_s: float = 0.05
+    dead_frac: float = 0.5
+    seed: int = 0
+    name: str = "burst"
+
+    def rate_at(self, t: float) -> float:
+        return self.burst_rps if (t % self.burst_every_s) < self.burst_len_s \
+            else self.base_rps
+
+    def requests(self) -> list:
+        rng = random.Random(self.seed)
+        t, out = 0.0, []
+        for i in range(self.n_requests):
+            t += rng.expovariate(self.rate_at(t))
+            out.append(ScenarioRequest(
+                t=t, img=synth_image(self.in_shape, self.seed, i,
+                                     self.dead_frac)))
+        return out
+
+
+@dataclass(frozen=True)
+class DiurnalDriftScenario(Scenario):
+    """Steady arrivals whose OCCUPANCY drifts: the dead-channel band moves
+    from `dead_lo` to `dead_hi` over simulated time. ``drift="step"`` flips
+    at `t_drift` (the sharp regime change the re-plan-within-K-batches test
+    pins); ``drift="sine"`` widens and narrows the band smoothly over
+    `period_s` (set it to simulated hours for the paper's diurnal story).
+    The engine planned at the `dead_lo` regime must re-plan to the schedule
+    `plan_network` would pick at the drifted occupancy."""
+
+    in_shape: tuple = (16, 12, 12)
+    n_requests: int = 32
+    rate_rps: float = 200.0
+    dead_lo: float = 0.0
+    dead_hi: float = 0.5
+    drift: str = "step"  # "step" | "sine"
+    t_drift: float = 0.05  # step: time of the flip
+    period_s: float = 0.2  # sine: one widen+narrow cycle
+    seed: int = 0
+    name: str = "diurnal"
+
+    def dead_frac_at(self, t: float) -> float:
+        if self.drift == "step":
+            return self.dead_hi if t >= self.t_drift else self.dead_lo
+        if self.drift == "sine":
+            import math
+
+            phase = 0.5 - 0.5 * math.cos(2.0 * math.pi * t / self.period_s)
+            return self.dead_lo + (self.dead_hi - self.dead_lo) * phase
+        raise ValueError(f"unknown drift mode {self.drift!r} "
+                         "(choose 'step' or 'sine')")
+
+    def requests(self) -> list:
+        out = []
+        for i in range(self.n_requests):
+            t = i / self.rate_rps
+            out.append(ScenarioRequest(
+                t=t, img=synth_image(self.in_shape, self.seed, i,
+                                     self.dead_frac_at(t))))
+        return out
+
+
+@dataclass(frozen=True)
+class TenantSpec:
+    """One tenant stream of a multi-tenant scenario."""
+
+    in_shape: tuple
+    n_requests: int = 16
+    rate_rps: float = 100.0
+    dead_frac: float = 0.5
+
+
+@dataclass(frozen=True)
+class MultiTenantScenario(Scenario):
+    """Interleaved per-tenant streams, each a steady seeded stream of its own
+    shape/occupancy, merged by arrival time. The tenants' engines share one
+    `PlanCache` (`Engine(cache=...)`): the graph signature in `PlanKey` must
+    keep the compile count bounded by the number of DISTINCT keys, and no
+    tenant may ever execute another tenant's program."""
+
+    tenants: tuple = ()  # ((name, TenantSpec), ...)
+    seed: int = 0
+    name: str = "multi_tenant"
+
+    def requests(self) -> list:
+        out = []
+        for k, (stream, spec) in enumerate(self.tenants):
+            for i in range(spec.n_requests):
+                out.append(ScenarioRequest(
+                    t=i / spec.rate_rps,
+                    img=synth_image(spec.in_shape, self.seed + 7919 * (k + 1),
+                                    i, spec.dead_frac),
+                    stream=stream))
+        # stable sort: simultaneous arrivals keep tenant declaration order
+        return sorted(out, key=lambda r: r.t)
+
+    def streams(self) -> tuple:
+        return tuple(stream for stream, _ in self.tenants)
+
+
+@dataclass(frozen=True)
+class HotSwapScenario(Scenario):
+    """A steady stream that swaps the served model mid-flight: at `t_swap`
+    the driver calls `swap_fn(engines)` — canonically
+    ``engines[""].hot_swap(pruned_params)`` to install a differently-pruned
+    BSR variant under load. The swap is atomic between batches: requests
+    completed before it carry the old model's logits, requests after carry
+    the new model's, and no in-flight bucket mixes the two."""
+
+    in_shape: tuple = (16, 12, 12)
+    n_requests: int = 32
+    rate_rps: float = 200.0
+    t_swap: float = 0.05
+    swap_fn: object = None  # callable(engines: dict) -> None
+    dead_frac: float = 0.5
+    seed: int = 0
+    name: str = "hot_swap"
+    events: tuple = field(init=False, default=())
+
+    def __post_init__(self):
+        if self.swap_fn is None:
+            raise ValueError("HotSwapScenario needs swap_fn= (the timed "
+                             "model-swap action, e.g. a hot_swap closure)")
+        object.__setattr__(self, "events",
+                           ((float(self.t_swap), self.swap_fn),))
+
+    def requests(self) -> list:
+        return [ScenarioRequest(
+            t=i / self.rate_rps,
+            img=synth_image(self.in_shape, self.seed, i, self.dead_frac))
+            for i in range(self.n_requests)]
+
+
+# ---------------------------------------------------------------------------
+# the replay driver
+# ---------------------------------------------------------------------------
+
+
+def replay_scenario(engines, scenario) -> dict:
+    """Drive one scenario's event loop to completion on a shared `SimClock`.
+
+    `engines` is one `Engine` or a ``{stream: Engine}`` mapping covering every
+    stream the scenario emits; all engines must share ONE SimClock instance
+    (the simulated timeline is global — one tenant's execution time delays
+    every tenant's queue, exactly like a shared host).
+
+    The loop is the deterministic generalization of the old `replay_stream`:
+    enqueue every arrival at or before the current sim time (a backlog behind
+    an executing batch must coalesce into full buckets, not dribble out as
+    singletons), fire every due scenario event (between batches — never
+    mid-execution), poll every engine until nothing is due (each executed
+    batch may advance the clock past further deadlines, arrivals, or
+    events), then jump the clock to the next event: the earliest of the next
+    arrival, the next scenario event, and every engine's batcher deadline.
+
+    Returns ``{stream: [ServedResult, ...]}`` in completion order per stream.
+    """
+    from repro.serving.engine import Engine
+
+    if isinstance(engines, Engine):
+        engines = {"": engines}
+    clocks = {id(e.clock): e.clock for e in engines.values()}
+    if len(clocks) != 1 or not isinstance(next(iter(clocks.values())), SimClock):
+        raise ValueError("replay_scenario needs every engine on ONE shared "
+                         "SimClock")
+    clock = next(iter(clocks.values()))
+    reqs = sorted(scenario.requests(), key=lambda r: r.t)
+    missing = {r.stream for r in reqs} - set(engines)
+    if missing:
+        raise ValueError(f"scenario emits streams {sorted(missing)} with no "
+                         f"engine (have {sorted(engines)})")
+    events = sorted(((float(t), fn) for t, fn in scenario.events),
+                    key=lambda e: e[0])
+    results: dict = {k: [] for k in engines}
+    served = 0
+    i = 0
+
+    def submit_due():
+        nonlocal i
+        while i < len(reqs) and reqs[i].t <= clock():
+            engines[reqs[i].stream].submit(reqs[i].img, now=reqs[i].t)
+            i += 1
+
+    def fire_due_events():
+        while events and events[0][0] <= clock():
+            _, fn = events.pop(0)
+            fn(engines)
+
+    while served < len(reqs):
+        submit_due()
+        fire_due_events()
+        progressed = True
+        while progressed:
+            progressed = False
+            for stream, eng in engines.items():
+                out = eng.poll()
+                if out:
+                    results[stream].extend(out)
+                    served += len(out)
+                    progressed = True
+                    submit_due()  # execution moved the clock: new backlog
+                    fire_due_events()
+        if served >= len(reqs):
+            break
+        cands = [eng.next_deadline() for eng in engines.values()]
+        if i < len(reqs):
+            cands.append(reqs[i].t)
+        if events:
+            cands.append(events[0][0])
+        cands = [c for c in cands if c is not None]
+        if not cands:  # nothing queued, nothing scheduled: requests were lost
+            break
+        clock.set(min(cands))
+    fire_due_events()  # an event scheduled at/after the final completion
+    return results

@@ -1,0 +1,166 @@
+"""Property-based MicroBatcher invariants (via tests/_hypothesis_compat.py —
+real hypothesis when installed, the deterministic seeded stand-in otherwise).
+
+Each property draws a seed and derives a batcher config plus an arbitrary
+interleaving of submit / clock-advance / ready / flush operations from one
+`random.Random(seed)` — the invariants must hold on EVERY interleaving, not
+just the arrival patterns the example-based tests in test_serving.py script:
+
+- conservation: no request is ever lost or duplicated across any interleaving;
+- every formed batch respects the bucket discipline (n_real <= bucket <=
+  max_batch, bucket in exec_buckets(), align-multiple, per-device slice >=
+  the post-clamp min_bucket floor);
+- ready() fires exactly when due (full bucket or oldest past deadline) and
+  never otherwise;
+- a driver that polls by next_deadline() never lets a request wait in the
+  queue longer than deadline_s (the engine/replay contract).
+"""
+import random
+
+from _hypothesis_compat import given, settings, st
+
+from repro.serving import MicroBatcher, SimClock
+
+
+def _config(rng):
+    """A random VALID batcher config (invalid combos raise — pinned by
+    test_batcher_align_device_slices — so the properties only draw configs
+    that construct)."""
+    align = rng.choice([1, 2, 4])
+    max_batch = align * rng.randint(1, 8)
+    min_bucket = rng.randint(1, 3)
+    if align > 1 and max_batch // align < min_bucket:
+        min_bucket = max_batch // align  # keep the floor satisfiable
+    return dict(max_batch=max_batch, align=align, min_bucket=min_bucket,
+                deadline_s=rng.choice([0.001, 0.005, 0.02]))
+
+
+def _check_bucket(b, batch):
+    assert 1 <= batch.n_real <= batch.bucket <= b.max_batch
+    assert batch.bucket in b.exec_buckets()
+    assert batch.bucket % b.align == 0
+    # b.min_bucket is the POST-clamp floor (construction clamps max_batch=1
+    # style configs); the per-device slice never goes below it
+    assert batch.bucket // b.align >= b.min_bucket
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_no_request_lost_or_duplicated(seed):
+    """Conservation across an arbitrary submit/advance/ready/flush
+    interleaving: every submitted id comes back in exactly one batch."""
+    rng = random.Random(seed)
+    clock = SimClock()
+    b = MicroBatcher(clock=clock, **_config(rng))
+    submitted, formed = [], []
+    for _ in range(rng.randint(1, 80)):
+        op = rng.random()
+        if op < 0.55:
+            submitted.append(b.submit(object()))
+        elif op < 0.75:
+            clock.advance(rng.uniform(0.0, 0.01))
+            batch = b.ready()
+            if batch is not None:
+                _check_bucket(b, batch)
+                formed.append(batch)
+        elif op < 0.9:
+            batch = b.flush()
+            if batch is not None:
+                _check_bucket(b, batch)
+                formed.append(batch)
+        else:
+            clock.advance(rng.uniform(0.0, 0.03))
+    while b.pending():
+        batch = b.flush()
+        _check_bucket(b, batch)
+        formed.append(batch)
+    served = [r.id for batch in formed for r in batch.requests]
+    assert sorted(served) == submitted  # ids are submission-ordered + unique
+    assert len(served) == len(set(served))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_ready_fires_exactly_when_due(seed):
+    """ready() forms a batch iff a full max_batch bucket is queued or the
+    OLDEST request's deadline has passed — and never on a quiet queue."""
+    rng = random.Random(seed)
+    clock = SimClock()
+    cfg = _config(rng)
+    b = MicroBatcher(clock=clock, **cfg)
+    oldest = []  # shadow arrival queue, in order
+    for _ in range(rng.randint(1, 80)):
+        if rng.random() < 0.5:
+            b.submit(object())
+            oldest.append(clock())
+        else:
+            clock.advance(rng.uniform(0.0, 0.012))
+        queued = len(oldest)
+        due = queued >= cfg["max_batch"] or (
+            queued > 0 and clock() >= oldest[0] + cfg["deadline_s"])
+        batch = b.ready()
+        if due:
+            assert batch is not None
+            _check_bucket(b, batch)
+            del oldest[:batch.n_real]
+        else:
+            assert batch is None
+    assert b.pending() == len(oldest)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_deadline_contract_under_driver_polling(seed):
+    """A driver that polls ready() no later than next_deadline() (the
+    engine/replay_stream discipline) bounds EVERY request's queue wait by
+    deadline_s, for arbitrary seeded arrival patterns."""
+    rng = random.Random(seed)
+    clock = SimClock()
+    cfg = _config(rng)
+    b = MicroBatcher(clock=clock, **cfg)
+    arrivals = []
+    t = 0.0
+    for _ in range(rng.randint(1, 60)):
+        t += rng.uniform(0.0, cfg["deadline_s"] * 2)
+        arrivals.append(t)
+    formed = []
+    i = 0
+    while i < len(arrivals) or b.pending():
+        cands = [c for c in (b.next_deadline(),
+                             arrivals[i] if i < len(arrivals) else None)
+                 if c is not None]
+        clock.set(min(cands))
+        while i < len(arrivals) and arrivals[i] <= clock():
+            b.submit(object(), now=arrivals[i])
+            i += 1
+        batch = b.ready()
+        while batch is not None:  # a burst can leave several due buckets
+            formed.append(batch)
+            batch = b.ready()
+    served = 0
+    for batch in formed:
+        _check_bucket(b, batch)
+        for r in batch.requests:
+            served += 1
+            assert batch.t_formed - r.t_arrival <= cfg["deadline_s"] + 1e-9, (
+                f"request waited {batch.t_formed - r.t_arrival:.5f}s with "
+                f"deadline {cfg['deadline_s']}s (seed {seed})")
+    assert served == len(arrivals)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_flush_drains_everything_in_bounded_batches(seed):
+    """flush() repeated to exhaustion drains the whole queue in batches of at
+    most max_batch, preserving submission order across batches."""
+    rng = random.Random(seed)
+    b = MicroBatcher(clock=SimClock(), **_config(rng))
+    n = rng.randint(0, 40)
+    ids = [b.submit(object()) for _ in range(n)]
+    out = []
+    while b.pending():
+        batch = b.flush()
+        _check_bucket(b, batch)
+        out.extend(r.id for r in batch.requests)
+    assert out == ids  # FIFO order survives arbitrary batch boundaries
+    assert b.flush() is None  # empty queue: no phantom batch

@@ -1,0 +1,201 @@
+"""Engine re-plan hysteresis under SCRIPTED occupancy: EMA convergence at the
+configured ema_alpha, cooldown suppression after a swap, atomicity of the
+async background swap (in-flight batches keep the old plan's exact logits),
+failed re-plans counting without killing serving, and the hot-swap
+generation bump dropping stale in-flight re-plan results.
+
+These drive `_observe` / `_launch_replan` / `_adopt_pending_plan` directly
+(or gate the module-level `plan_network` on an event) so every interleaving
+is deterministic — no sleeps, no races."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vgg19_sparse import CNNConfig
+from repro.models.cnn import init_cnn
+from repro.pipeline import plan_network, run_plan
+from repro.serving import Engine, SimClock, plan_key, synth_image
+from repro.serving import engine as engine_mod
+
+TINY = CNNConfig(name="vgg-serve-tiny", in_channels=16, img_size=12,
+                 plan=((8, 1), (16, 1)), n_classes=4)
+SHAPE = (16, TINY.img_size, TINY.img_size)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_cnn(jax.random.PRNGKey(0), TINY)
+
+
+def _engine(params, **kw):
+    kw.setdefault("calib", jnp.stack([synth_image(SHAPE, 900, i, 0.5)
+                                      for i in range(2)]))
+    kw.setdefault("occ_threshold", 0.9)
+    kw.setdefault("block_c", 8)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("deadline_s", 0.005)
+    kw.setdefault("clock", SimClock())
+    kw.setdefault("sim_service_s", 0.002)
+    return Engine(params, TINY, **kw)
+
+
+def _dense(seed):
+    """A fully-dense request image: entry occupancy 1.0, far from the 0.5
+    regime the engine planned at — the drift driver."""
+    return synth_image(SHAPE, seed, 0, 0.0)
+
+
+def test_ema_convergence_matches_alpha(params):
+    """k scripted observations of a constant target converge the EMA exactly
+    as target + (start - target) * (1 - alpha)^k — the published semantics of
+    ema_alpha, pinned against silent re-weightings."""
+    a = 0.3
+    eng = _engine(params, ema_alpha=a, replan_band=10.0)  # band: never trigger
+    start = eng._occ_ema.copy()
+    target = np.full_like(start, 0.95)
+    for k in range(1, 6):
+        eng._observe(target.copy())
+        expect = target + (start - target) * (1.0 - a) ** k
+        np.testing.assert_allclose(eng._occ_ema, expect, rtol=1e-12)
+    assert eng.n_replans == 0  # wide band: scripted drift never triggered
+    # the telemetry timeline recorded one row per observation
+    assert len(eng.metrics.occ_timeline) == 5
+
+
+def test_replan_cooldown_suppresses_triggers(params):
+    """After a swap the detector must hold fire for replan_cooldown
+    observations even when the EMA sits far outside the band — the hysteresis
+    that stops plan thrash on the tail of a regime change."""
+    eng = _engine(params, ema_alpha=1.0, replan_band=0.05, replan_cooldown=3)
+    launches = []
+    eng._launch_replan = lambda: launches.append(eng.clock())
+    # simulate an adopted re-plan: same schedule (changed=False), arms cooldown
+    eng._pending_plan = eng.plan
+    eng._adopt_pending_plan()
+    assert eng.n_replans == 0 and eng._cooldown == 3
+    far = np.zeros_like(eng._occ_ema)  # delta 0.5+: far outside the band
+    for _ in range(3):
+        eng._observe(far)
+        assert launches == []  # cooldown ticks down, no launch
+    eng._observe(far)
+    assert len(launches) == 1  # first post-cooldown observation fires
+    assert eng.metrics.replan_triggers == 1
+
+
+def test_async_replan_swap_is_atomic_between_batches(params):
+    """While a background re-plan is in flight, every executed batch keeps the
+    OLD plan's bit-exact logits; the new plan only takes effect at the next
+    poll() adoption point — never mid-stream."""
+    eng = _engine(params, ema_alpha=1.0, replan_band=0.1, replan_cooldown=0,
+                  replan_async=True)
+    plan_old = eng.plan
+    release = threading.Event()
+    real_plan_network = engine_mod.plan_network
+
+    def gated(*args, **kw):
+        release.wait(30)
+        return real_plan_network(*args, **kw)
+
+    engine_mod.plan_network = gated
+    try:
+        batch1 = [_dense(i) for i in range(4)]
+        out1 = eng.serve(batch1)  # dense batch: EMA jumps, trigger fires
+        assert eng._replanning and eng.n_replans == 0
+        np.testing.assert_array_equal(
+            out1, np.asarray(run_plan(plan_old, params, jnp.stack(batch1))))
+        batch2 = [_dense(10 + i) for i in range(4)]
+        out2 = eng.serve(batch2)  # re-plan still in flight: old plan serves
+        assert eng.plan is plan_old
+        np.testing.assert_array_equal(
+            out2, np.asarray(run_plan(plan_old, params, jnp.stack(batch2))))
+        release.set()
+        eng.join_replan()
+    finally:
+        engine_mod.plan_network = real_plan_network
+    assert eng.poll() == []  # adoption point: swaps the finished plan in
+    assert eng.n_replans == 1
+    assert plan_key(0, eng.plan) != plan_key(0, plan_old)
+    batch3 = [_dense(20 + i) for i in range(4)]
+    np.testing.assert_array_equal(
+        eng.serve(batch3),
+        np.asarray(run_plan(eng.plan, params, jnp.stack(batch3))))
+    swaps = [e for e in eng.metrics.replan_events if e["kind"] == "swap"]
+    assert len(swaps) == 1 and swaps[0]["changed"]
+
+
+def test_replan_error_counts_without_killing_serving(params):
+    """A failing plan_network must not wedge the drift detector or drop the
+    batch that triggered it: the error is counted, the old plan keeps
+    serving, and the NEXT drift trigger (with planning healthy again)
+    re-plans normally."""
+    eng = _engine(params, ema_alpha=1.0, replan_band=0.1, replan_cooldown=0)
+    plan_old = eng.plan
+    real_plan_network = engine_mod.plan_network
+
+    def boom(*args, **kw):
+        raise RuntimeError("planner outage")
+
+    engine_mod.plan_network = boom
+    try:
+        for round_ in range(2):
+            batch = [_dense(round_ * 10 + i) for i in range(4)]
+            out = eng.serve(batch)  # trigger -> work() raises -> batch survives
+            np.testing.assert_array_equal(
+                out, np.asarray(run_plan(plan_old, params, jnp.stack(batch))))
+        assert eng.replan_errors == 2 and eng.n_replans == 0
+        assert eng.plan is plan_old and not eng._replanning
+    finally:
+        engine_mod.plan_network = real_plan_network
+    out = eng.serve([_dense(30 + i) for i in range(4)])  # healthy again
+    assert out.shape == (4, 4)
+    assert eng.n_replans == 1  # the retried trigger re-planned for real
+    assert eng.stats()["replan_errors"] == 2
+    kinds = [e["kind"] for e in eng.metrics.replan_events]
+    assert kinds.count("error") == 2 and kinds.count("swap") == 1
+
+
+def test_hot_swap_drops_stale_inflight_replan(params):
+    """A hot_swap that lands while a background re-plan is in flight bumps
+    the plan generation: the stale result (planned against the swapped-OUT
+    params) must be dropped on arrival, never adopted over the new model."""
+    eng = _engine(params, ema_alpha=1.0, replan_band=0.1, replan_cooldown=0,
+                  replan_async=True)
+    swap_plan = plan_network(params, jnp.stack([_dense(50), _dense(51)]),
+                             eng.graph, occ_threshold=eng.plan.occ_threshold,
+                             block_c=eng.plan.block_c,
+                             use_pallas=eng.use_pallas)
+    release = threading.Event()
+    real_plan_network = engine_mod.plan_network
+
+    def gated(*args, **kw):
+        release.wait(30)
+        return real_plan_network(*args, **kw)
+
+    engine_mod.plan_network = gated
+    try:
+        eng.serve([_dense(i) for i in range(4)])  # drift: background re-plan
+        assert eng._replanning
+        eng.hot_swap(params, plan=swap_plan)  # lands mid-flight: bumps gen
+        release.set()
+        eng.join_replan()
+    finally:
+        engine_mod.plan_network = real_plan_network
+    assert eng.poll() == []  # adoption point: nothing pending to adopt
+    assert eng.plan is swap_plan  # the stale result did NOT clobber the swap
+    assert eng._pending_plan is None and not eng._replanning
+    assert eng.n_replans == 0 and eng.n_hot_swaps == 1
+    # and the engine still serves, detector unwedged
+    out = eng.serve([_dense(60 + i) for i in range(4)])
+    assert out.shape == (4, 4)
+
+
+def test_hot_swap_recenters_ema_and_arms_cooldown(params):
+    eng = _engine(params, replan_cooldown=2)
+    eng.serve([synth_image(SHAPE, 7, i, 0.5) for i in range(4)])
+    eng.hot_swap(eng.params)  # re-plans on the most recent real batch
+    np.testing.assert_array_equal(
+        eng._occ_ema, np.array([lp.occupancy for lp in eng.plan.layers]))
+    assert eng._cooldown == 2 and eng.n_hot_swaps == 1
