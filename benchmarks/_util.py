@@ -12,8 +12,10 @@ import numpy as np
 
 from repro.core import synth_feature_map, window_stats
 
-# v5e-class roofline constants — one definition, in the registry (the cost
-# dispatch every planner/autotune decision already routes through)
+# v5e-class roofline constants — ONE definition, in repro.obs.constants
+# (re-exported by the registry, the cost dispatch every planner/autotune
+# decision routes through); a fitted obs.calibrate.CalibrationDB overrides
+# them per (kind, impl) via the calibration= parameters, never by mutation
 from repro.graph.registry import HBM_BW, PEAK_FLOPS  # noqa: E402,F401
 
 

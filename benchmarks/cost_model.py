@@ -1,0 +1,161 @@
+"""Cost-model accuracy regression: predicted vs MEASURED per-layer time for
+all four conv impl families, on the reduced model zoo (LeNet / AlexNet /
+VGG), before and after calibration (DESIGN.md §9).
+
+Per network: prune the weights to ~0.5 block density (so the BSR rows
+measure a schedule that actually skips), plan at block_c=8, then
+`obs.profile_plan` times every layer under dense / ecr_pallas / pecr_pallas
+/ bsr and pairs each measurement with `unit_model_us` at the DEFAULT
+roofline constants. A `CalibrationDB` is fitted from those same rows and the
+report is re-predicted through it — the CALIBRATED ranking agreement is the
+number CI pins a floor under (`--min-agreement`): if a cost-model change
+makes the planner order impls differently from the clock, this benchmark
+exits nonzero before the regression ships.
+
+One row per (network, layer, kind, impl): measured_us, predicted_us at the
+defaults, predicted_us calibrated, and both ratios. The BENCH extras carry
+per-network agreement (default AND calibrated, top1 + pairwise) and the
+fitted per-key scales.
+
+Run:
+    PYTHONPATH=src python benchmarks/cost_model.py --json . \\
+        --trace-out trace.json --min-agreement 0.5
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+from benchmarks._util import dead_band_calib, write_bench_json
+from benchmarks.model_zoo import _zoo
+from repro.obs import CalibrationDB, Tracer, profile_plan
+from repro.pipeline import plan_network
+
+
+def sweep(batch: int = 2, iters: int = 3, warmup: int = 1,
+          prune_density: float = 0.5, tracer=None):
+    """Profile the reduced zoo; returns (rows, per-network agreement dict,
+    fitted CalibrationDB). One shared DB accumulates all three networks'
+    measurements — the fit keys on (kind, impl), so more layers per key just
+    means a better median."""
+    from repro.graph import init_graph
+    from repro.models.cnn import shift_dead_channels
+    from repro.sparse_weights import prune_graph_params
+
+    db = CalibrationDB()
+    reports = []
+    for graph in _zoo(reduced=True):
+        params = shift_dead_channels(init_graph(jax.random.PRNGKey(0), graph))
+        calib = dead_band_calib(graph, batch)
+        # ~half the weight blocks zeroed: the BSR rows must measure a
+        # schedule with real skips, not a degenerate all-live one
+        params, _ = prune_graph_params(params, prune_density, graph)
+        plan = plan_network(params, calib, graph, occ_threshold=0.75,
+                            block_c=8)
+        report = profile_plan(plan, params, calib, iters=iters,
+                              warmup=warmup, tracer=tracer)
+        db.fit_report(report)
+        reports.append(report)
+
+    rows, agreement = [], {}
+    for report in reports:
+        recal = report.recalibrated(db)
+        agreement[report.graph_name] = {
+            "default": report.agreement(),
+            "calibrated": recal.agreement(),
+        }
+        by_key = {(t.index, t.kind, t.impl): t for t in recal.timings}
+        for t in report.timings:
+            c = by_key[(t.index, t.kind, t.impl)]
+            rows.append({
+                "name": f"cost_model/{report.graph_name}/conv{t.index + 1}"
+                        f"/{t.impl}",
+                "us_per_call": round(t.measured_us, 2),
+                "derived": (f"kind={t.kind} occ={t.occupancy:.2f} "
+                            f"wd={t.weight_density:.2f} "
+                            f"ratio={t.ratio:.3g} "
+                            f"ratio_cal={c.ratio:.3g}"),
+                "network": report.graph_name,
+                "layer": t.index,
+                "kind": t.kind,
+                "impl": t.impl,
+                "occupancy": round(t.occupancy, 4),
+                "weight_density": round(t.weight_density, 4),
+                "measured_us": round(t.measured_us, 2),
+                "predicted_us": round(t.predicted_us, 4),
+                "predicted_us_calibrated": round(c.predicted_us, 2),
+                "ratio": round(t.ratio, 6),
+                "ratio_calibrated": round(c.ratio, 6),
+            })
+    return rows, agreement, db
+
+
+def _mean_agreement(agreement: dict, which: str, metric: str) -> float:
+    vals = [a[which][metric] for a in agreement.values()]
+    return sum(vals) / max(len(vals), 1)
+
+
+def main(batch: int = 2, iters: int = 3, warmup: int = 1,
+         json_dir: str | None = None, trace_out: str | None = None,
+         calib_out: str | None = None,
+         min_agreement: float | None = None) -> int:
+    tracer = Tracer() if trace_out else None
+    rows, agreement, db = sweep(batch=batch, iters=iters, warmup=warmup,
+                                tracer=tracer)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    cal_top1 = _mean_agreement(agreement, "calibrated", "top1")
+    extra = {
+        "agreement": agreement,
+        "agreement_mean": {
+            "default_top1": _mean_agreement(agreement, "default", "top1"),
+            "default_pairwise": _mean_agreement(agreement, "default",
+                                                "pairwise"),
+            "calibrated_top1": cal_top1,
+            "calibrated_pairwise": _mean_agreement(agreement, "calibrated",
+                                                   "pairwise"),
+        },
+        "calibration": db.summary(),
+        "device_kind": db.device,
+    }
+    for k, v in extra["agreement_mean"].items():
+        print(f"_meta/agreement/{k},{v:.3f}")
+    if json_dir:
+        path = write_bench_json("cost_model", rows, json_dir, extra=extra)
+        print(f"_meta/json,{path}")
+    if trace_out:
+        tracer.save(trace_out)
+        print(f"_meta/trace,{trace_out}")
+    if calib_out:
+        db.save(calib_out)
+        print(f"_meta/calibration,{calib_out}")
+    if min_agreement is not None and cal_top1 < min_agreement:
+        print(f"FAIL: calibrated top-1 ranking agreement {cal_top1:.3f} < "
+              f"floor {min_agreement:.3f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--json", nargs="?", const=".", default=None,
+                    metavar="DIR",
+                    help="also write BENCH_cost_model.json (default dir: cwd)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="Chrome trace_event JSON of the profiling spans")
+    ap.add_argument("--calib-out", default=None, metavar="PATH",
+                    help="persist the fitted CalibrationDB as JSON")
+    ap.add_argument("--min-agreement", type=float, default=None,
+                    metavar="FLOOR",
+                    help="exit 1 if the mean CALIBRATED top-1 ranking "
+                         "agreement falls below this floor (the CI gate)")
+    args = ap.parse_args()
+    sys.exit(main(batch=args.batch, iters=args.iters, warmup=args.warmup,
+                  json_dir=args.json, trace_out=args.trace_out,
+                  calib_out=args.calib_out,
+                  min_agreement=args.min_agreement))

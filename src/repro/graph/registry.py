@@ -148,9 +148,14 @@ def unit_impl(unit: ConvUnit, impl: str) -> tuple:
 # Cost dispatch (the one place a unit is costed as a (kind, impl))
 # ---------------------------------------------------------------------------
 
-# v5e-class roofline constants (shared with benchmarks/_util and the dry-run)
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
+# THE roofline constants live in repro.obs.constants (one definition, which a
+# measured CalibrationDB overrides per impl); these names stay re-exported so
+# benchmarks/_util, the dry-run and autotune keep one import site.
+from repro.obs.constants import (  # noqa: E402
+    DEFAULT_HBM_BW as HBM_BW,
+    DEFAULT_PEAK_FLOPS as PEAK_FLOPS,
+    DEFAULT_ROOFLINE,
+)
 
 
 def _pool_round_trip(base: dict, pool: int, dtype_bytes: int = 4) -> dict:
@@ -188,10 +193,18 @@ def unit_cost(kind: str, impl: str, *, c, h, w, o, k, stride=1, pool=None,
 
 def unit_model_us(kind: str, impl: str, unit: ConvUnit, *,
                   occupancy: float = 1.0, weight_density: float = 1.0,
-                  batch: int = 1) -> float:
+                  batch: int = 1, block_c: int = 0,
+                  calibration=None) -> float:
     """Roofline-modeled time (us) of executing `unit` as (kind, impl) — the
     common currency of the planner's per-layer impl choice and the
-    autotuner's whole-plan model (`plan_model_us` sums this per layer)."""
+    autotuner's whole-plan model (`plan_model_us` sums this per layer).
+
+    `calibration` (a `repro.obs.calibrate.CalibrationDB`, or None) supplies
+    MEASURED effective constants per (device kind, kind, impl, block_c);
+    any key the DB does not cover — and calibration=None entirely — falls
+    back to the datasheet defaults, bit-identically to the pre-calibration
+    model. `block_c` is the plan's channel-block size (0 = auto), the block
+    geometry the calibration is keyed on."""
     conv = unit.conv
     c, h, w = unit.in_shape
     cost = unit_cost(kind, impl, c=c, h=h + 2 * conv.pad, w=w + 2 * conv.pad,
@@ -199,7 +212,9 @@ def unit_model_us(kind: str, impl: str, unit: ConvUnit, *,
                      pool=unit.pool.p if unit.pool is not None else None,
                      occupancy=occupancy, weight_density=weight_density,
                      batch=batch)
-    return max(cost["flops"] / PEAK_FLOPS, cost["bytes"] / HBM_BW) * 1e6
+    consts = DEFAULT_ROOFLINE if calibration is None else \
+        calibration.constants_for(kind, impl, block_c)
+    return consts.time_us(cost["flops"], cost["bytes"])
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,10 @@ Traffic scenarios (telemetry + scenario library, DESIGN.md §8):
     PYTHONPATH=src python -m repro.launch.serve_cnn --scenario diurnal
     PYTHONPATH=src python -m repro.launch.serve_cnn --scenario hotswap
     PYTHONPATH=src python -m repro.launch.serve_cnn --scenario multitenant
+Kernel-level trace + measured cost-model calibration (DESIGN.md §9):
+    PYTHONPATH=src python -m repro.launch.serve_cnn --trace-out trace.json
+    PYTHONPATH=src python -m repro.launch.serve_cnn --calibrate \\
+        --calib-out calibration.json
 """
 from __future__ import annotations
 
@@ -149,7 +153,9 @@ def serve_cnn(*, model: str = "vgg19", full: bool = False,
               occ_threshold: float = 0.75, block_c: int = 8,
               do_autotune: bool = False, replan_band: float = 0.15,
               devices: int = 0, prune_density: float = 1.0,
-              scenario: str = "steady", seed: int = 0) -> dict:
+              scenario: str = "steady", seed: int = 0,
+              trace_out: str | None = None, calibrate: bool = False,
+              calib_out: str | None = None) -> dict:
     graph = serving_graph(model, full)
     params = shift_dead_channels(init_graph(jax.random.PRNGKey(seed), graph))
     # --devices 0 degrades like the Engine's auto policy (largest local
@@ -169,18 +175,45 @@ def serve_cnn(*, model: str = "vgg19", full: bool = False,
                  "max logit drift %.3g, top-1 agreement %.2f",
                  report.density, prune_density, report.max_logit_drift,
                  report.top1_agreement)
+    clock = SimClock()
+    tracer = None
+    if trace_out:
+        from repro.obs import Tracer
+
+        # the tracer shares the engine's SimClock, so two identical runs
+        # export bit-identical trace files (tests/test_obs.py pins this)
+        tracer = Tracer(clock=clock)
+    calibration = None
+    if calibrate:
+        from repro.obs import CalibrationDB, profile_plan
+        from repro.pipeline.planner import plan_network
+
+        # measure the DEFAULT-constants plan, fit effective constants from
+        # the measured/modeled ratios, then let every later planning step
+        # (autotune grid, engine initial plan, drift re-plans) price impls
+        # at the fitted numbers (DESIGN.md §9)
+        base = plan_network(params, calib, graph, occ_threshold=occ_threshold,
+                            block_c=block_c)
+        report = profile_plan(base, params, calib, tracer=tracer)
+        calibration = CalibrationDB.from_report(report)
+        if calib_out:
+            calibration.save(calib_out)
+            log.info("calibration DB written to %s", calib_out)
+        log.info("calibrated %d (kind, impl) keys on %s: %s",
+                 len(calibration.entries), calibration.device,
+                 calibration.summary())
     plan = None
     if do_autotune:
         result = autotune(params, calib, graph, thresholds=(0.5, 0.75, 0.9),
-                          block_cs=(0, 8), mesh=mesh)
+                          block_cs=(0, 8), mesh=mesh, calibration=calibration)
         plan = result.plan
         log.info("autotune picked occ_threshold=%.2f block_c=%d (model fallback: %s)",
                  result.best.occ_threshold, result.best.block_c, result.used_model)
-    clock = SimClock()
     engine = Engine(params, graph=graph, plan=plan, calib=calib,
                     occ_threshold=occ_threshold, block_c=block_c,
                     max_batch=max_batch, deadline_s=deadline_ms * 1e-3,
-                    clock=clock, replan_band=replan_band, mesh=mesh)
+                    clock=clock, replan_band=replan_band, mesh=mesh,
+                    tracer=tracer, calibration=calibration)
     log.info("%s plan: %s", graph.name, " ".join(
         f"conv{lp.index + 1}={lp.impl}@{lp.occupancy:.2f}" for lp in engine.plan.layers))
     compiled = engine.warmup()
@@ -217,7 +250,12 @@ def serve_cnn(*, model: str = "vgg19", full: bool = False,
         "mean_fill": stats["mean_fill"],
         **{k: stats[k] for k in ("batches", "compiles", "hits", "replans",
                                  "hot_swaps")},
+        "calibrated": 0 if calibration is None else len(calibration.entries),
     }
+    if tracer is not None:
+        tracer.save(trace_out)
+        log.info("wrote %d trace events to %s (chrome://tracing / Perfetto)",
+                 len(tracer.events), trace_out)
     log.info("served %d requests (%s traffic) at %.0f req/s offered: "
              "%.1f req/s, p50=%.1fms p95=%.1fms, %d batches (fill %.2f), "
              "%d compiles / %d cache hits, %d replans, %d hot swaps",
@@ -261,6 +299,17 @@ def main():
                          "occupancy drift (forces a re-plan), hot swap to a "
                          "0.3-density pruned variant mid-stream, or two "
                          "models multi-tenant over one shared plan cache")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace_event JSON of the run (plan/"
+                         "compile/execute/re-plan spans on the sim clock; "
+                         "load in chrome://tracing or Perfetto)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="profile the base plan per impl, fit a CalibrationDB "
+                         "of measured effective roofline constants, and plan "
+                         "the served engine with it (DESIGN.md §9)")
+    ap.add_argument("--calib-out", default=None, metavar="PATH",
+                    help="with --calibrate: persist the fitted CalibrationDB "
+                         "as JSON for later --calibrate-free runs to load")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve_cnn(model=args.model, full=args.full, n_requests=args.n_requests,
@@ -269,7 +318,8 @@ def main():
               block_c=args.block_c, do_autotune=args.autotune,
               replan_band=args.replan_band, devices=args.devices,
               prune_density=args.prune_density, scenario=args.scenario,
-              seed=args.seed)
+              seed=args.seed, trace_out=args.trace_out,
+              calibrate=args.calibrate, calib_out=args.calib_out)
 
 
 if __name__ == "__main__":

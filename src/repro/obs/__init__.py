@@ -1,0 +1,62 @@
+"""Observability: kernel-level tracing, profiling, cost-model calibration.
+
+The layer below `serving.metrics` (which aggregates the REQUEST stream):
+this package observes the EXECUTION itself and closes the loop back into
+the planner (DESIGN.md §9):
+
+- `trace`     span tracer (plan -> compile -> per-batch execute ->
+              per-layer kernel), deterministic on a SimClock, exported as
+              Chrome trace_event JSON loadable in Perfetto;
+- `profile`   the wall-time harness (jit warm-up, block_until_ready,
+              median-of-k with outlier rejection — shared with
+              `serving.autotune`) and `profile_plan`, which times every
+              layer of a `PipelinePlan` per impl at its real shapes and
+              pairs each measurement with the registry's modeled time;
+- `calibrate` `CalibrationDB`: effective roofline constants fitted per
+              (device kind x op kind x impl x block geometry) from a
+              `ProfileReport`, consumed by `unit_model_us` /
+              `plan_model_us` / `plan_network` via `calibration=` — the
+              hard-coded `constants` defaults stay the fallback, so an
+              empty DB is bit-identical to no calibration;
+- `constants` the ONE definition of the datasheet roofline pair every
+              modeled time in the repo divides by.
+
+Entry points: `launch/serve_cnn.py --trace-out/--calibrate`,
+`benchmarks/cost_model.py` (predicted-vs-measured regression artifact),
+`Engine(tracer=..., calibration=...)` / `Engine.profile()`.
+"""
+from repro.obs.calibrate import CalibEntry, CalibrationDB, device_kind
+from repro.obs.constants import (
+    DEFAULT_HBM_BW,
+    DEFAULT_PEAK_FLOPS,
+    DEFAULT_ROOFLINE,
+    RooflineConstants,
+)
+from repro.obs.profile import (
+    PROFILE_IMPLS,
+    LayerTiming,
+    ProfileReport,
+    TimingResult,
+    profile_plan,
+    time_callable,
+)
+from repro.obs.trace import NULL_TRACER, NullTracer, Tracer
+
+__all__ = [
+    "CalibEntry",
+    "CalibrationDB",
+    "DEFAULT_HBM_BW",
+    "DEFAULT_PEAK_FLOPS",
+    "DEFAULT_ROOFLINE",
+    "LayerTiming",
+    "NULL_TRACER",
+    "NullTracer",
+    "PROFILE_IMPLS",
+    "ProfileReport",
+    "RooflineConstants",
+    "TimingResult",
+    "Tracer",
+    "device_kind",
+    "profile_plan",
+    "time_callable",
+]

@@ -1,0 +1,183 @@
+"""CalibrationDB: measured effective roofline constants per (device, impl).
+
+The datasheet constants in `repro.obs.constants` describe what the chip CAN
+do; the planner needs what each impl DOES — interpret-mode Pallas on CPU,
+an XLA conv, and a gathered sparse kernel on a real accelerator sit at
+wildly different fractions of the roofline, and the dense-vs-sparse
+crossover moves with them (the measured-not-assumed point of
+Pietroń & Żurek, arXiv:2011.06295). The DB stores, per
+
+    (device kind x op kind x impl x block geometry)      — PlanKey-style
+
+an EFFECTIVE `RooflineConstants` pair fitted from `profile_plan`
+measurements, and every modeled time in the repo (`unit_model_us`,
+`plan_model_us`, `plan_network`'s occupancy-rule and BSR-displacement
+arbitration) consults it through an explicit `calibration=` parameter — the
+hard-coded defaults remain the fallback for any key the DB does not cover,
+so an EMPTY DB reproduces the uncalibrated behavior bit-identically.
+
+Fit model: one efficiency scalar per key. A kernel is assumed to run at a
+fixed fraction `s` of the datasheet roofline (both ceilings scaled
+together), so `s = median over layers of (modeled_default_us /
+measured_us)` and the effective constants are `defaults x s`. The median
+makes the fit robust to one outlier layer; the per-key residual spread is
+recorded so a caller can see when one scalar does NOT explain an impl's
+behavior across shapes (the cue to split the block-geometry key further).
+
+Persistence is plain JSON (`save`/`load`) so a calibration survives across
+processes and ships next to BENCH artifacts.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass
+
+from repro.obs.constants import DEFAULT_ROOFLINE, RooflineConstants
+
+
+def device_kind() -> str:
+    """The running device's kind string (the DB's device axis)."""
+    import jax
+
+    dev = jax.devices()[0]
+    return getattr(dev, "device_kind", dev.platform)
+
+
+@dataclass(frozen=True)
+class CalibEntry:
+    """One fitted key: the effective constants plus fit diagnostics."""
+
+    peak_flops: float
+    hbm_bw: float
+    scale: float  # fitted efficiency vs the datasheet defaults
+    n_samples: int
+    resid_spread: float  # (max-min)/median of the per-layer ratios
+
+    def constants(self) -> RooflineConstants:
+        return RooflineConstants(self.peak_flops, self.hbm_bw)
+
+
+class CalibrationDB:
+    """{(device_kind, kind, impl, block_c): CalibEntry} with default fallback.
+
+    `lookup` tries the exact block geometry first, then the geometry-agnostic
+    `block_c=0` entry (a fit at auto block size covers explicit sizes until
+    one is measured), then gives up (None -> caller uses the defaults).
+    `device` pins the device axis; entries fitted on other device kinds are
+    never consulted (a CPU calibration must not steer a TPU plan).
+    """
+
+    def __init__(self, entries: dict | None = None, device: str | None = None):
+        self.entries: dict = dict(entries or {})
+        self.device = device
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __bool__(self) -> bool:
+        # an empty DB is falsy ON PURPOSE: `calibration or None` normalizes
+        # "no calibration" and "nothing fitted yet" to the same fallback
+        return bool(self.entries)
+
+    def _device(self) -> str:
+        if self.device is None:
+            self.device = device_kind()
+        return self.device
+
+    def put(self, kind: str, impl: str, block_c: int, entry: CalibEntry,
+            device: str | None = None) -> None:
+        self.entries[(device or self._device(), kind, impl, int(block_c))] = entry
+
+    def lookup(self, kind: str, impl: str, block_c: int = 0,
+               device: str | None = None) -> RooflineConstants | None:
+        dev = device or self._device()
+        for bc in (int(block_c), 0):
+            e = self.entries.get((dev, kind, impl, bc))
+            if e is not None:
+                return e.constants()
+        return None
+
+    def covers(self, kind: str, impl: str, block_c: int = 0,
+               device: str | None = None) -> bool:
+        return self.lookup(kind, impl, block_c, device) is not None
+
+    def constants_for(self, kind: str, impl: str, block_c: int = 0,
+                      device: str | None = None) -> RooflineConstants:
+        """The effective constants for a key: calibrated, else the defaults
+        (the one resolution rule every modeled time goes through)."""
+        return self.lookup(kind, impl, block_c, device) or DEFAULT_ROOFLINE
+
+    # -- fitting -------------------------------------------------------------
+
+    def fit_report(self, report) -> "CalibrationDB":
+        """Fold a `ProfileReport` in: one entry per (kind, impl, block_c)
+        group, scale = median(predicted_default / measured) (see module
+        docstring). Returns self (chainable)."""
+        for (kind, impl), rows in report.by_impl().items():
+            by_bc: dict = {}
+            for t in rows:
+                by_bc.setdefault(int(t.block_c), []).append(t)
+            for bc, grp in by_bc.items():
+                ratios = sorted(t.ratio for t in grp)
+                s = _median(ratios)
+                if s <= 0.0:
+                    continue  # degenerate measurement; keep the defaults
+                spread = (ratios[-1] - ratios[0]) / max(s, 1e-12)
+                self.put(kind, impl, bc, CalibEntry(
+                    peak_flops=DEFAULT_ROOFLINE.peak_flops * s,
+                    hbm_bw=DEFAULT_ROOFLINE.hbm_bw * s,
+                    scale=float(s), n_samples=len(grp),
+                    resid_spread=float(spread)),
+                    device=report.device_kind)
+        if self.device is None:
+            self.device = report.device_kind
+        return self
+
+    @classmethod
+    def from_report(cls, report) -> "CalibrationDB":
+        return cls(device=report.device_kind).fit_report(report)
+
+    # -- persistence ----------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {"schema": "calibration-v1", "device": self.device,
+                "entries": [
+                    {"device": d, "kind": k, "impl": i, "block_c": bc,
+                     **asdict(e)}
+                    for (d, k, i, bc), e in sorted(self.entries.items())]}
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "CalibrationDB":
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("schema") != "calibration-v1":
+            raise ValueError(f"{path}: not a calibration DB "
+                             f"(schema={payload.get('schema')!r})")
+        db = cls(device=payload.get("device"))
+        for row in payload["entries"]:
+            db.put(row["kind"], row["impl"], row["block_c"],
+                   CalibEntry(peak_flops=row["peak_flops"],
+                              hbm_bw=row["hbm_bw"], scale=row["scale"],
+                              n_samples=row["n_samples"],
+                              resid_spread=row["resid_spread"]),
+                   device=row["device"])
+        return db
+
+    def summary(self) -> dict:
+        """JSON-ready digest (scales per key) for logs and BENCH extras."""
+        return {f"{d}/{k}/{i}/bc{bc}": round(e.scale, 6)
+                for (d, k, i, bc), e in sorted(self.entries.items())}
+
+
+def _median(sorted_vals) -> float:
+    n = len(sorted_vals)
+    if n == 0:
+        return 0.0
+    return float(sorted_vals[n // 2]) if n % 2 else \
+        float((sorted_vals[n // 2 - 1] + sorted_vals[n // 2]) / 2)

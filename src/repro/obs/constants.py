@@ -1,0 +1,48 @@
+"""THE roofline constants: one definition, overridable by measurement.
+
+Every modeled time in this repo — the planner's dense/ECR/PECR/BSR
+arbitration (`repro.graph.registry.unit_model_us`), the autotuner's
+noisy-clock fallback (`repro.serving.autotune.plan_model_us`), the dry-run's
+roofline terms (`repro.launch.dryrun`) and the benchmark helpers
+(`benchmarks/_util.modeled_tpu_us`) — divides FLOPs and HBM bytes by the pair
+defined HERE. The historical copies in `graph/registry.py`,
+`benchmarks/_util.py` and the dry-run are now re-exports of this module, so a
+calibration (or a new device target) changes one number in one place.
+
+The defaults are v5e-class *guesses* — peak numbers off the datasheet, not
+what the Pallas kernels achieve. `repro.obs.calibrate.CalibrationDB` fits
+per-(device kind, op kind, impl, block geometry) EFFECTIVE constants from
+measured kernel time (`repro.obs.profile`) and overrides these defaults
+wherever a cost is modeled; with no calibration present the defaults apply
+bit-identically to the pre-calibration behavior.
+
+This module must stay dependency-free (stdlib only): it sits below the op
+registry in the import graph.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# v5e-class datasheet constants (the uncalibrated fallback everywhere)
+DEFAULT_PEAK_FLOPS = 197e12  # FLOP/s
+DEFAULT_HBM_BW = 819e9  # B/s
+
+
+@dataclass(frozen=True)
+class RooflineConstants:
+    """One (compute ceiling, memory ceiling) pair — default or calibrated."""
+
+    peak_flops: float = DEFAULT_PEAK_FLOPS
+    hbm_bw: float = DEFAULT_HBM_BW
+
+    def time_us(self, flops: float, nbytes: float) -> float:
+        """Roofline time (us): max of the compute and memory terms."""
+        return max(flops / self.peak_flops, nbytes / self.hbm_bw) * 1e6
+
+    def scaled(self, s: float) -> "RooflineConstants":
+        """Both ceilings scaled by efficiency `s` (the CalibrationDB's fit:
+        a kernel running at fraction `s` of the datasheet roofline)."""
+        return RooflineConstants(self.peak_flops * s, self.hbm_bw * s)
+
+
+DEFAULT_ROOFLINE = RooflineConstants()

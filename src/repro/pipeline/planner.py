@@ -145,6 +145,7 @@ def plan_network(
     block_c: int = 0,
     use_pallas: bool = True,
     bsr_threshold: float = 0.5,
+    calibration=None,
 ) -> PipelinePlan:
     """Walk the graph's conv units on a calibration batch, emit the schedule.
 
@@ -164,12 +165,24 @@ def plan_network(
     every window for reading only live weight blocks, so it beats ECR
     exactly when the weight density undercuts the activation occupancy (and
     beats dense almost always once pruned).
+
+    `calibration` (a `repro.obs.calibrate.CalibrationDB`) puts every one of
+    those modeled-time comparisons on MEASURED effective constants
+    (DESIGN.md §9): the BSR-displacement race runs calibrated, and the
+    occupancy-rule choice itself is re-checked — a layer the threshold sent
+    sparse falls back to dense when the calibrated model says the measured
+    sparse kernel loses to the measured dense path at this occupancy (the
+    device-specific crossover the hard-coded constants cannot see). The
+    re-check only fires for (kind, impl) keys the DB actually covers, so an
+    empty or absent DB reproduces the uncalibrated plan bit-identically.
     """
     from repro.sparse_weights import weight_block_density
 
     graph = as_graph(graph)
     if calib.ndim == 3:
         calib = calib[None]
+    if calibration is not None and not calibration:
+        calibration = None  # empty DB == no calibration, one code path
     sparse_conv = "ecr_pallas" if use_pallas else "ecr"
     conv_ws, _ = graph_weights(params)
     layers = []
@@ -187,11 +200,23 @@ def plan_network(
                 kind, impl = "conv", sparse_conv
         else:
             kind, impl = "conv", "dense"
+        if go_sparse and calibration is not None and (
+                calibration.covers(kind, impl, block_c)
+                or calibration.covers("conv", "dense", block_c)):
+            sparse_us = unit_model_us(kind, impl, unit, occupancy=occ,
+                                      batch=batch, block_c=block_c,
+                                      calibration=calibration)
+            dense_us = unit_model_us("conv", "dense", unit, batch=batch,
+                                     block_c=block_c, calibration=calibration)
+            if dense_us < sparse_us:
+                kind, impl = "conv", "dense"
         if use_pallas and wd <= bsr_threshold:
             base_us = unit_model_us(kind, impl, unit, occupancy=occ,
-                                    batch=batch)
+                                    batch=batch, block_c=block_c,
+                                    calibration=calibration)
             bsr_us = unit_model_us("conv", "bsr", unit, weight_density=wd,
-                                   batch=batch)
+                                   batch=batch, block_c=block_c,
+                                   calibration=calibration)
             if bsr_us < base_us:
                 kind, impl = "conv", "bsr"
         # the dense oracle produces the next calibration input

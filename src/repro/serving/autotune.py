@@ -20,11 +20,9 @@ their MACs and their DMA).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 
 import jax
-import numpy as np
 
 from repro.graph import as_graph
 from repro.graph.registry import HBM_BW, PEAK_FLOPS, get_op, unit_model_us
@@ -60,7 +58,8 @@ class AutotuneResult:
         return self.best.plan
 
 
-def plan_model_us(plan: PipelinePlan, params, batch: int = 1) -> float:
+def plan_model_us(plan: PipelinePlan, params, batch: int = 1,
+                  calibration=None) -> float:
     """Roofline-modeled execution time (us) of a plan at a given batch size:
     the registry's `unit_model_us` per layer (each LayerPlan's own IR specs —
     `to_unit` rejects pre-IR plans — so LeNet's 5x5 convs and AlexNet's
@@ -70,14 +69,21 @@ def plan_model_us(plan: PipelinePlan, params, batch: int = 1) -> float:
     classifier GEMMs. Summing per-layer roofline maxima upper-bounds the
     whole-program roofline the pre-BSR version took over global totals —
     identical whenever one side of the roofline dominates every layer, which
-    these conv stacks satisfy, and a consistent ranking either way."""
+    these conv stacks satisfy, and a consistent ranking either way.
+
+    `calibration` (a `repro.obs.calibrate.CalibrationDB`) prices each layer
+    at its impl's MEASURED effective constants (DESIGN.md §9); uncovered
+    keys — and calibration=None — use the datasheet defaults. The head
+    GEMMs always model at the defaults: they run as plain XLA dots, outside
+    the per-impl kernel families the DB is keyed on."""
     from repro.graph.ir import graph_weights
 
     us = 0.0
     for lp in plan.layers:
         us += unit_model_us(lp.kind, lp.impl, lp.to_unit(),
                             occupancy=lp.occupancy,
-                            weight_density=lp.weight_density, batch=batch)
+                            weight_density=lp.weight_density, batch=batch,
+                            block_c=plan.block_c, calibration=calibration)
     # classifier: flatten -> dense head GEMMs
     flops = 0.0
     nbytes = 0.0
@@ -100,21 +106,24 @@ def hlo_model_us(fn, *args) -> float:
 
 
 def _time_us(f, *args, iters: int = 3, warmup: int = 1) -> tuple:
-    """(median_us, spread) of a jitted callable; spread=(max-min)/median."""
-    for _ in range(warmup):
-        jax.block_until_ready(f(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(f(*args))
-        ts.append((time.perf_counter() - t0) * 1e6)
-    med = float(np.median(ts))
-    return med, float((max(ts) - min(ts)) / max(med, 1e-9)), [float(t) for t in ts]
+    """(median_us, spread, samples) via the SHARED timing harness
+    (`repro.obs.profile.time_callable` — jit warm-up, block_until_ready,
+    median-of-k): autotune candidates and `obs.profile_plan` layer rows are
+    measured by the same protocol, so their numbers are comparable.
+    Outlier rejection stays off here — the spread feeds the noisy-clock
+    fallback decision, which must see the raw clock quality."""
+    from repro.obs.profile import time_callable
+
+    t = time_callable(f, *args, iters=iters, warmup=warmup, outlier_tol=0.0)
+    return t.median_us, t.spread, list(t.samples_us)
 
 
-def _model_us(plan: PipelinePlan, params, calib, runner) -> float:
-    if any(get_op(lp.kind, lp.impl).pallas for lp in plan.layers):
-        return plan_model_us(plan, params, batch=calib.shape[0])
+def _model_us(plan: PipelinePlan, params, calib, runner,
+              calibration=None) -> float:
+    if calibration is not None or \
+            any(get_op(lp.kind, lp.impl).pallas for lp in plan.layers):
+        return plan_model_us(plan, params, batch=calib.shape[0],
+                             calibration=calibration)
     return hlo_model_us(runner, params, calib)
 
 
@@ -122,7 +131,7 @@ def autotune(params, calib, graph=None, *,
              thresholds=(0.0, 0.5, 0.75, 0.9), block_cs=(0, 8),
              iters: int = 3, warmup: int = 1, noise_tol: float = 0.25,
              use_pallas: bool = True, mode: str = "auto",
-             mesh=None) -> AutotuneResult:
+             mesh=None, calibration=None) -> AutotuneResult:
     """Grid-search (occ_threshold, block_c); return the plan that serves the
     calibration batch fastest. `graph` is a LayerGraph or legacy CNNConfig
     (None = full VGG-19).
@@ -139,6 +148,13 @@ def autotune(params, calib, graph=None, *,
     batch must divide the device count. The cost-model fallback stays
     per-device (the roofline constants describe one chip, and the collective
     traffic is identical across candidates, so it cancels in the ranking).
+
+    `calibration` (a `repro.obs.calibrate.CalibrationDB`) flows into both
+    sides of the search: candidate plans are BUILT calibrated
+    (`plan_network(calibration=)`) and the noisy-clock fallback ranks by the
+    calibrated `plan_model_us` (a populated DB also retires the dense-plan
+    HLO path — measured per-impl constants beat re-deriving the default
+    roofline from lowered HLO). None keeps today's behavior exactly.
     """
     graph = as_graph(graph)
     if calib.ndim == 3:
@@ -151,7 +167,8 @@ def autotune(params, calib, graph=None, *,
     for th in thresholds:
         for bc in block_cs:
             plan = plan_network(params, calib, graph, occ_threshold=th,
-                                block_c=bc, use_pallas=use_pallas)
+                                block_c=bc, use_pallas=use_pallas,
+                                calibration=calibration)
             sig = plan_key(calib.shape[0], plan)
             if sig in seen:  # same schedule == same executable: reuse timing
                 cands.append(Candidate(th, bc, plan, *seen[sig]))
@@ -187,7 +204,7 @@ def autotune(params, calib, graph=None, *,
             sig = plan_key(calib.shape[0], c.plan)
             if sig not in model_by_sig:
                 model_by_sig[sig] = _model_us(c.plan, params, calib,
-                                              runners[sig])
+                                              runners[sig], calibration)
             c.model_us = model_by_sig[sig]
     best = min(cands, key=lambda c: c.model_us) if used_model else by_time[0]
     return AutotuneResult(best=best, candidates=cands, used_model=used_model)

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graph import as_graph
+from repro.obs.trace import NULL_TRACER
 from repro.parallel.api import data_mesh, sharding_for
 from repro.pipeline.planner import PipelinePlan, plan_network, run_plan, run_plan_sharded
 from repro.serving.batcher import MicroBatch, MicroBatcher, SimClock
@@ -123,14 +124,27 @@ class Engine:
                  replan_cooldown: int = 2, replan_async: bool = False,
                  cache_entries: int = 32, cache: PlanCache | None = None,
                  metrics: MetricsTracker | None = None,
-                 sim_service_s=None):
+                 sim_service_s=None, tracer=None, calibration=None):
+        # tracer: a repro.obs.trace.Tracer recording plan/compile/execute/
+        # re-plan spans (DESIGN.md §9); the NULL_TRACER default is a shared
+        # no-op object, so the untraced hot path allocates nothing.
+        # calibration: a repro.obs.calibrate.CalibrationDB — every plan this
+        # engine builds (initial, drift re-plans, hot-swap re-plans) prices
+        # its impl choices at the measured effective constants; None (or an
+        # empty DB) keeps the datasheet defaults bit-identically.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.calibration = calibration
         graph = plan.graph if plan is not None and plan.graph is not None \
             else as_graph(graph if graph is not None else ccfg)
         if plan is None:
             if calib is None:
                 raise ValueError("Engine needs either a prebuilt plan= or calib= images to plan on")
-            plan = plan_network(params, calib, graph, occ_threshold=occ_threshold,
-                                block_c=block_c, use_pallas=use_pallas)
+            with self.tracer.span("plan", graph=graph.name,
+                                  occ_threshold=occ_threshold):
+                plan = plan_network(params, calib, graph,
+                                    occ_threshold=occ_threshold,
+                                    block_c=block_c, use_pallas=use_pallas,
+                                    calibration=calibration)
         # mesh="auto": 1-D data mesh over the largest local-device prefix
         # dividing max_batch (all devices when they divide; fewer on awkward
         # hosts rather than refusing to construct); a 1-device mesh (every
@@ -183,6 +197,7 @@ class Engine:
         self.n_requests = 0
         self.n_pad_samples = 0
         self._fill_sum = 0.0
+        self._profile_summary = None  # last Engine.profile() digest
 
     # ------------------------------------------------------------------
     # request loop
@@ -277,8 +292,35 @@ class Engine:
             **{k: v for k, v in self.metrics.latency.percentiles_ms().items()
                if k != "count"},
             "lat_count": self.metrics.latency.count,
-            "telemetry": self.metrics.snapshot(),
+            "telemetry": {**self.metrics.snapshot(),
+                          "profile": self._profile_summary},
         }
+
+    def profile(self, imgs=None, *, impls=None, iters: int = 3,
+                warmup: int = 1):
+        """Per-layer measured-vs-modeled timing of the CURRENT plan
+        (`repro.obs.profile.profile_plan` at the engine's real shapes): each
+        layer of the plan is timed under every requested impl family and
+        paired with the registry's `unit_model_us` prediction. The report's
+        digest (per-impl medians + ranking agreement) lands in
+        ``stats()["telemetry"]["profile"]`` so serving benchmarks carry it in
+        the same artifact as the request-stream metrics; the full report is
+        returned (feed it to `CalibrationDB.from_report` to close the loop).
+
+        `imgs` defaults to the most recent real executed batch — same source
+        the drift re-planner uses — so an engine that has served traffic can
+        be profiled without new inputs."""
+        from repro.obs.profile import PROFILE_IMPLS, profile_plan
+
+        calib = self._calib_recent if imgs is None else jnp.asarray(imgs)
+        if calib is None:
+            raise ValueError("profile() needs imgs= before the engine has "
+                             "executed its first batch")
+        report = profile_plan(self.plan, self.params, calib,
+                              impls=PROFILE_IMPLS if impls is None else impls,
+                              iters=iters, warmup=warmup, tracer=self.tracer)
+        self._profile_summary = report.summary()
+        return report
 
     # ------------------------------------------------------------------
     # execution
@@ -289,19 +331,22 @@ class Engine:
         plan, params, mesh = self.plan, self.params, self.mesh
 
         def build():
-            c, h, w = plan.layers[0].in_shape
-            imgs_s = jax.ShapeDtypeStruct((bucket, c, h, w), jnp.float32)
-            nv_s = jax.ShapeDtypeStruct((), jnp.int32)
-            if mesh is None:
-                fn = jax.jit(_make_runner(plan))
-            else:
-                # pin the AOT input layout: params/n_valid replicated, batch
-                # split over "data" (the batcher's align made it divisible)
-                fn = jax.jit(_make_runner(plan, mesh), in_shardings=(
-                    sharding_for((), (), mesh),
-                    self._batch_sharding((bucket, c, h, w)),
-                    sharding_for((), (), mesh)))
-            return fn.lower(params, imgs_s, nv_s).compile()
+            with self.tracer.span("compile", bucket=bucket,
+                                  devices=self.n_devices):
+                c, h, w = plan.layers[0].in_shape
+                imgs_s = jax.ShapeDtypeStruct((bucket, c, h, w), jnp.float32)
+                nv_s = jax.ShapeDtypeStruct((), jnp.int32)
+                if mesh is None:
+                    fn = jax.jit(_make_runner(plan))
+                else:
+                    # pin the AOT input layout: params/n_valid replicated,
+                    # batch split over "data" (the batcher's align made it
+                    # divisible)
+                    fn = jax.jit(_make_runner(plan, mesh), in_shardings=(
+                        sharding_for((), (), mesh),
+                        self._batch_sharding((bucket, c, h, w)),
+                        sharding_for((), (), mesh)))
+                return fn.lower(params, imgs_s, nv_s).compile()
 
         return self.cache.get_or_compile(key, plan, build)
 
@@ -312,6 +357,14 @@ class Engine:
                             self.mesh)
 
     def _run_batch(self, batch: MicroBatch) -> list:
+        # spans on the engine's own clock: under a SimClock the service time
+        # charged to the timeline is exactly the span duration, so traced
+        # replays are deterministic (tests/test_obs.py pins the bytes)
+        with self.tracer.span("execute_batch", bucket=batch.bucket,
+                              n_real=batch.n_real):
+            return self._run_batch_traced(batch)
+
+    def _run_batch_traced(self, batch: MicroBatch) -> list:
         imgs = jnp.stack([r.img for r in batch.requests])
         if batch.bucket > batch.n_real:  # ragged tail: all-zero pad samples
             pad = jnp.zeros((batch.bucket - batch.n_real,) + imgs.shape[1:], imgs.dtype)
@@ -381,9 +434,12 @@ class Engine:
 
         def work():
             try:
-                new = plan_network(self.params, calib, self.graph,
-                                   occ_threshold=plan.occ_threshold,
-                                   block_c=plan.block_c, use_pallas=self.use_pallas)
+                with self.tracer.span("replan", trigger="occupancy_drift"):
+                    new = plan_network(self.params, calib, self.graph,
+                                       occ_threshold=plan.occ_threshold,
+                                       block_c=plan.block_c,
+                                       use_pallas=self.use_pallas,
+                                       calibration=self.calibration)
             except Exception:
                 # a failed re-plan must neither wedge the drift detector nor
                 # take down the serving loop — keep the current plan, count
@@ -448,10 +504,13 @@ class Engine:
             if calib is None:
                 raise ValueError("hot_swap needs plan= or calib= before the "
                                  "engine has executed its first batch")
-            plan = plan_network(params, calib, self.graph,
-                                occ_threshold=self.plan.occ_threshold,
-                                block_c=self.plan.block_c,
-                                use_pallas=self.use_pallas)
+            with self.tracer.span("plan", graph=self.graph.name,
+                                  trigger="hot_swap"):
+                plan = plan_network(params, calib, self.graph,
+                                    occ_threshold=self.plan.occ_threshold,
+                                    block_c=self.plan.block_c,
+                                    use_pallas=self.use_pallas,
+                                    calibration=self.calibration)
         with self._lock:
             self._plan_gen += 1
             self._pending_plan = None
