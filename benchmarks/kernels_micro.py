@@ -1,22 +1,47 @@
-"""Pallas kernel microbenchmarks: occupancy sweep -> skipped work fraction.
+"""Pallas kernel microbenchmarks: occupancy sweep + tile-geometry search.
 
-Interpret-mode wall time is meaningless for TPU perf; the relevant kernel
-metrics are structural: fraction of MXU block-MACs and HBM->VMEM block-DMAs
-the gathered schedule skips at each occupancy, plus the exactness check."""
+Two sweeps, one BENCH_kernels_micro.json:
+
+1. **BSR occupancy sweep** — interpret-mode wall time is meaningless for TPU
+   perf; the relevant kernel metrics are structural: fraction of MXU
+   block-MACs and HBM->VMEM block-DMAs the gathered schedule skips at each
+   occupancy (structured vs unstructured zeros), plus the exactness check.
+
+2. **Tile-geometry search over the reduced model zoo** (DESIGN.md §10) —
+   LeNet/AlexNet/VGG reduced graphs planned by `plan_network`, every conv
+   layer searched by `repro.obs.tile_search` at its planned impl, plus the
+   int8 planning probe (`plan_network(int8=True)`). One row per searched
+   layer (default vs winner, modeled and measured) and one summary row per
+   network.
+
+``--check-floor`` turns the sweep into a CI gate: exit non-zero unless every
+searched layer's winner models AND measures no slower than its default
+geometry (the winner rule's by-construction floor) and every network's int8
+probe holds the 0.98 top-1 agreement budget. ``--calib-out`` saves the
+merged CalibrationDB (tile winners + fitted per-tile constants) the search
+produced, so a serving run can start from the searched state.
+"""
 from __future__ import annotations
+
+import argparse
+import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-
-from repro.core import synth_feature_map
-from repro.kernels.bsr_matmul.ops import block_schedule, sparse_matmul
-from repro.kernels.bsr_matmul.ref import bsr_matmul_ref
 
 
-def main():
+# ---------------------------------------------------------------------------
+# sweep 1: BSR schedule occupancy -> skipped work fraction
+# ---------------------------------------------------------------------------
+
+
+def occupancy_rows() -> list:
+    from repro.kernels.bsr_matmul.ops import block_schedule, sparse_matmul
+    from repro.kernels.bsr_matmul.ref import bsr_matmul_ref
+
     t, f, d = 64, 1024, 512
     w = jax.random.normal(jax.random.PRNGKey(1), (f, d))
+    rows = []
     for structured, label in ((False, "unstructured"), (True, "structured")):
         for sparsity in (0.0, 0.5, 0.8, 0.95):
             key = jax.random.PRNGKey(int(sparsity * 10) + structured)
@@ -35,10 +60,132 @@ def main():
             y = sparse_matmul(x, w)
             err = float(jnp.abs(y - bsr_matmul_ref(x, w)).max())
             skipped = 1.0 - occ
-            print(f"kernels/bsr_{label}_sp{sparsity},0.0,block_occupancy={occ:.3f} "
-                  f"mxu_work_skipped={skipped:.3f} dma_skipped={skipped:.3f} "
-                  f"max_err={err:.2e}")
+            rows.append({
+                "name": f"kernels/bsr_{label}_sp{sparsity}",
+                "us_per_call": 0.0,
+                "derived": (f"block_occupancy={occ:.3f} "
+                            f"mxu_work_skipped={skipped:.3f} "
+                            f"dma_skipped={skipped:.3f} max_err={err:.2e}"),
+            })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# sweep 2: tile-geometry search + int8 probe over the reduced zoo
+# ---------------------------------------------------------------------------
+
+
+def _zoo():
+    from repro.configs.alexnet import ALEXNET_REDUCED
+    from repro.configs.lenet import LENET_REDUCED
+    from repro.configs.vgg19_sparse import CNN_REDUCED, vgg19_graph
+
+    return (LENET_REDUCED, ALEXNET_REDUCED, vgg19_graph(CNN_REDUCED))
+
+
+def tile_rows(batch: int = 2, iters: int = 2, warmup: int = 1,
+              max_timed: int = 2, int8: bool = True, db=None) -> tuple:
+    """(rows, merged CalibrationDB, floor_ok, int8_ok) over the reduced zoo.
+
+    One search per network at the sparse-forced planning point
+    (occ_threshold=1.0, block_c=8 — the zoo smoke's "sparse" row, so the
+    search exercises the Pallas kernels rather than re-timing dense XLA),
+    winners accumulated into ONE shared DB across networks: the tiles table
+    is keyed by layer shape, so disjoint networks only collide on shapes
+    that should share a winner anyway."""
+    from benchmarks._util import dead_band_calib
+    from repro.graph import init_graph
+    from repro.obs import tile_search
+    from repro.pipeline import plan_network
+
+    rows: list = []
+    floor_ok = True
+    int8_ok = True
+    for graph in _zoo():
+        params = init_graph(jax.random.PRNGKey(0), graph)
+        calib = dead_band_calib(graph, batch)
+        plan = plan_network(params, calib, graph, occ_threshold=1.0,
+                            block_c=8)
+        report, db = tile_search(plan, params, calib, iters=iters,
+                                 warmup=warmup, max_timed=max_timed, db=db)
+        s = report.summary()
+        floor_ok &= bool(s["floor_holds"])
+        rows.append({
+            "name": f"kernels/tiles/{graph.name}",
+            "us_per_call": 0.0,
+            "derived": (f"layers={s['layers']} improved={s['improved']} "
+                        f"floor_holds={s['floor_holds']} "
+                        f"model_speedup={s['model_speedup']:.4f}"),
+        })
+        for r in report.layers:
+            rows.append({
+                "name": f"kernels/tiles/{graph.name}/L{r.index}_{r.impl}",
+                "us_per_call": max(r.best.measured_us, 0.0),
+                "derived": (f"tile={'x'.join(map(str, r.best.key))} "
+                            f"model_us={r.best.model_us:.4f} "
+                            f"default_model_us={r.default.model_us:.4f} "
+                            f"default_measured_us={r.default.measured_us:.1f} "
+                            f"improved={r.improved} n_timed="
+                            f"{sum(c.timed for c in r.candidates)}"),
+            })
+        if int8:
+            p8 = plan_network(params, calib, graph, occ_threshold=1.0,
+                              block_c=8, tiles=db, int8=True)
+            rep = p8.int8_report
+            agree = rep.top1_agreement if rep is not None else 1.0
+            int8_ok &= agree >= 0.98
+            rows.append({
+                "name": f"kernels/int8/{graph.name}",
+                "us_per_call": 0.0,
+                "derived": (f"int8_layers={p8.counts()['int8']} "
+                            f"demoted={len(rep.demoted) if rep else 0} "
+                            f"top1_agreement={agree:.3f} "
+                            f"max_logit_drift="
+                            f"{rep.max_logit_drift if rep else 0.0:.2e}"),
+            })
+    return rows, db, floor_ok, int8_ok
+
+
+def main(json_dir: str | None = None, check_floor: bool = False,
+         calib_out: str | None = None, batch: int = 2, iters: int = 2,
+         warmup: int = 1, max_timed: int = 2, int8: bool = True) -> int:
+    rows = occupancy_rows()
+    trows, db, floor_ok, int8_ok = tile_rows(batch=batch, iters=iters,
+                                             warmup=warmup,
+                                             max_timed=max_timed, int8=int8)
+    rows += trows
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    if calib_out and db is not None:
+        print(f"# calibration (tile winners + fits) -> {db.save(calib_out)}")
+    if json_dir:
+        from benchmarks._util import write_bench_json
+
+        write_bench_json("kernels_micro", rows, json_dir,
+                         extra={"floor_holds": floor_ok, "int8_ok": int8_ok})
+    if check_floor and not (floor_ok and int8_ok):
+        print(f"FLOOR CHECK FAILED: floor_holds={floor_ok} int8_ok={int8_ok}",
+              file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const=".", default=None, metavar="DIR",
+                    help="also write BENCH_kernels_micro.json (default: cwd)")
+    ap.add_argument("--check-floor", action="store_true",
+                    help="exit 1 unless every searched winner holds the "
+                         "modeled+measured floor and int8 agreement >= 0.98")
+    ap.add_argument("--calib-out", default=None, metavar="PATH",
+                    help="save the merged searched CalibrationDB as JSON")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--iters", type=int, default=2)
+    ap.add_argument("--max-timed", type=int, default=2)
+    ap.add_argument("--no-int8", action="store_true",
+                    help="skip the int8 planning probe")
+    args = ap.parse_args()
+    sys.exit(main(json_dir=args.json, check_floor=args.check_floor,
+                  calib_out=args.calib_out, batch=args.batch,
+                  iters=args.iters, max_timed=args.max_timed,
+                  int8=not args.no_int8))

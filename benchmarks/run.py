@@ -15,7 +15,9 @@ pipeline, the weight-sparsity sweep (`sparse_weights`) runs the same
 zoo pruned at each target BSR density through the joint planner, and the
 scenario sweep (`scenarios`) drives regime-diverse traffic — bursts,
 diurnal occupancy drift, hot swap, multi-tenant — through the engine's
-telemetry layer.
+telemetry layer, and the kernel microbenchmarks (`kernels_micro`) add the
+tile-geometry search + int8 probe over the reduced zoo (BENCH_kernels_micro
+carries the floor-check verdict).
 """
 from __future__ import annotations
 
@@ -76,7 +78,7 @@ def main() -> None:
             continue
         # these benchmarks write their own (richer) BENCH json; same dir
         own_json = name in ("serve", "serve_sharded", "sparse_weights",
-                            "scenarios")
+                            "scenarios", "kernels")
         kwargs = {"json_dir": args.json} if (args.json and own_json) else {}
         t0 = time.time()
         if args.json is None:

@@ -64,16 +64,19 @@ def maxpool2d(x, pool: PoolSpec):
 # ---------------------------------------------------------------------------
 
 
-def run_unit(x, w, unit: ConvUnit, kind: str, impl: str, block_c: int = 0):
+def run_unit(x, w, unit: ConvUnit, kind: str, impl: str, block_c: int = 0,
+             tile=None):
     """Execute one conv unit as (kind, impl): the fused op consumes the whole
     conv+ReLU+pool triple; a plain conv gets the unit's ReLU / unfused pool
-    applied structurally around it."""
+    applied structurally around it. `tile` is the layer's searched
+    `TileConfig` (None = the impl's default geometry); non-Pallas impls
+    ignore it."""
     op = get_op(kind, impl)
     xp = pad2d(x, unit.conv.pad)
     if kind == "conv_pool":
         return op.forward(xp, w, stride=unit.conv.stride, pool=unit.pool,
-                          block_c=block_c)
-    x = op.forward(xp, w, stride=unit.conv.stride, block_c=block_c)
+                          block_c=block_c, tile=tile)
+    x = op.forward(xp, w, stride=unit.conv.stride, block_c=block_c, tile=tile)
     if unit.relu:
         x = jnp.maximum(x, 0.0)
     if unit.pool is not None:
@@ -81,10 +84,12 @@ def run_unit(x, w, unit: ConvUnit, kind: str, impl: str, block_c: int = 0):
     return x
 
 
-def run_units(x, conv_ws, units, impls, block_c: int = 0):
-    """Run the conv body: `impls` is one (kind, impl) pair per unit."""
-    for unit, (kind, impl), w in zip(units, impls, conv_ws):
-        x = run_unit(x, w, unit, kind, impl, block_c)
+def run_units(x, conv_ws, units, impls, block_c: int = 0, tiles=None):
+    """Run the conv body: `impls` is one (kind, impl) pair per unit; `tiles`
+    (optional) one TileConfig-or-None per unit."""
+    for i, (unit, (kind, impl), w) in enumerate(zip(units, impls, conv_ws)):
+        tile = tiles[i] if tiles is not None else None
+        x = run_unit(x, w, unit, kind, impl, block_c, tile=tile)
     return x
 
 

@@ -42,8 +42,11 @@ from repro.graph.ir import ConvUnit
 class OpImpl:
     """One registered (kind, impl) implementation.
 
-    forward: kind "conv"      -> f(x_padded, w, *, stride, block_c) -> y
-             kind "conv_pool" -> f(x_padded, w, *, stride, pool, block_c) -> y
+    forward: kind "conv"      -> f(x_padded, w, *, stride, block_c, tile) -> y
+             kind "conv_pool" -> f(x_padded, w, *, stride, pool, block_c,
+             tile) -> y  (`tile` is a `repro.kernels.tiles.TileConfig` — the
+             searched kernel geometry; None/all-zero = the impl's defaults,
+             and non-Pallas impls ignore it entirely)
     cost:    f(c, h, w, o, kh, kw, *, stride, occupancy, batch, [pool]) -> dict
              with "flops"/"bytes"/"out_elems" (None = no model; autotune then
              treats the layer as dense roofline).
@@ -56,6 +59,10 @@ class OpImpl:
              honours `weight_density`, and `validate_plan` re-checks the
              params' measured density against the plan's at run time.
     pallas:  realized as a Pallas kernel (vs a jnp oracle / XLA path).
+    quantized: int8 compute path (fp32 in/out, int8 operands inside) — the
+             planner only places these under an explicit accuracy budget
+             (`plan_network(int8=..., int8_budget=...)`), mirroring how
+             weight_sparse impls sit behind the density gate.
     fused_with: for kind "conv_pool", the kind-"conv" impl of the same family
              (used when a unit's pool is NOT fusion-eligible); for kind
              "conv", the kind-"conv_pool" impl it upgrades to when fusion IS
@@ -69,6 +76,7 @@ class OpImpl:
     sparse: bool = False
     weight_sparse: bool = False
     pallas: bool = False
+    quantized: bool = False
     fused_with: str | None = None
 
 
@@ -193,17 +201,18 @@ def unit_cost(kind: str, impl: str, *, c, h, w, o, k, stride=1, pool=None,
 
 def unit_model_us(kind: str, impl: str, unit: ConvUnit, *,
                   occupancy: float = 1.0, weight_density: float = 1.0,
-                  batch: int = 1, block_c: int = 0,
+                  batch: int = 1, block_c: int = 0, tile=None,
                   calibration=None) -> float:
     """Roofline-modeled time (us) of executing `unit` as (kind, impl) — the
     common currency of the planner's per-layer impl choice and the
     autotuner's whole-plan model (`plan_model_us` sums this per layer).
 
     `calibration` (a `repro.obs.calibrate.CalibrationDB`, or None) supplies
-    MEASURED effective constants per (device kind, kind, impl, block_c);
+    MEASURED effective constants per (device kind, kind, impl, tile geometry);
     any key the DB does not cover — and calibration=None entirely — falls
     back to the datasheet defaults, bit-identically to the pre-calibration
-    model. `block_c` is the plan's channel-block size (0 = auto), the block
+    model. `block_c` is the plan's channel-block size (0 = auto) and `tile`
+    the full searched `TileConfig` (None = defaults) — together the block
     geometry the calibration is keyed on."""
     conv = unit.conv
     c, h, w = unit.in_shape
@@ -213,7 +222,7 @@ def unit_model_us(kind: str, impl: str, unit: ConvUnit, *,
                      occupancy=occupancy, weight_density=weight_density,
                      batch=batch)
     consts = DEFAULT_ROOFLINE if calibration is None else \
-        calibration.constants_for(kind, impl, block_c)
+        calibration.constants_for(kind, impl, block_c, tile=tile)
     return consts.time_us(cost["flops"], cost["bytes"])
 
 
@@ -222,47 +231,52 @@ def unit_model_us(kind: str, impl: str, unit: ConvUnit, *,
 # ---------------------------------------------------------------------------
 
 
-def _conv_dense(xp, w, *, stride, block_c=0):
+def _conv_dense(xp, w, *, stride, block_c=0, tile=None):
     from repro.core.ecr import conv2d_dense
 
     return conv2d_dense(xp, w, stride)
 
 
-def _conv_im2col(xp, w, *, stride, block_c=0):
+def _conv_im2col(xp, w, *, stride, block_c=0, tile=None):
     from repro.core.ecr import conv2d_im2col
 
     return conv2d_im2col(xp, w, stride)
 
 
-def _conv_ecr(xp, w, *, stride, block_c=0):
+def _conv_ecr(xp, w, *, stride, block_c=0, tile=None):
     from repro.core.ecr import conv2d_ecr
 
     return conv2d_ecr(xp, w, stride)
 
 
-def _conv_ecr_pallas(xp, w, *, stride, block_c=0):
+def _conv_ecr_pallas(xp, w, *, stride, block_c=0, tile=None):
     from repro.kernels.ecr_conv.ops import ecr_conv
+    from repro.kernels.tiles import as_tile
 
-    return ecr_conv(xp, w, stride, block_c=block_c)
+    t = as_tile(tile, block_c)
+    return ecr_conv(xp, w, stride, block_c=t.block_c, block_o=t.block_o)
 
 
-def _conv_pool_unfused(xp, w, *, stride, pool, block_c=0):
+def _conv_pool_unfused(xp, w, *, stride, pool, block_c=0, tile=None):
     from repro.core.pecr import conv_pool_unfused
 
     return conv_pool_unfused(xp, w, stride, pool.p, pool.s)
 
 
-def _conv_pool_pecr(xp, w, *, stride, pool, block_c=0):
+def _conv_pool_pecr(xp, w, *, stride, pool, block_c=0, tile=None):
     from repro.core.pecr import conv_pool_pecr
 
     return conv_pool_pecr(xp, w, stride, pool.p, pool.s)
 
 
-def _conv_pool_pecr_pallas(xp, w, *, stride, pool, block_c=0):
+def _conv_pool_pecr_pallas(xp, w, *, stride, pool, block_c=0, tile=None):
     from repro.kernels.conv_pool.ops import fused_conv_pool
+    from repro.kernels.tiles import as_tile
 
     # p_s rides through so the kernel's stride==p assertion keeps guarding
-    return fused_conv_pool(xp, w, stride, pool.p, p_s=pool.s, block_c=block_c)
+    t = as_tile(tile, block_c)
+    return fused_conv_pool(xp, w, stride, pool.p, p_s=pool.s,
+                           block_c=t.block_c, block_o=t.block_o)
 
 
 def _conv_cost(c, h, w, o, kh, kw, **kw_args):
@@ -287,16 +301,42 @@ def _conv_pool_unfused_cost(c, h, w, o, kh, kw, *, pool=2, dtype_bytes=4, **kw_a
         pool, dtype_bytes)
 
 
-def _conv_bsr(xp, w, *, stride, block_c=0):
+def _conv_bsr(xp, w, *, stride, block_c=0, tile=None):
     from repro.sparse_weights.conv import conv2d_bsr
 
-    return conv2d_bsr(xp, w, stride)
+    return conv2d_bsr(xp, w, stride, tile=tile if tile else None)
 
 
 def _bsr_cost(c, h, w, o, kh, kw, **kw_args):
     from repro.sparse_weights.conv import bsr_conv_cost
 
     return bsr_conv_cost(c, h, w, o, kh, kw, **kw_args)
+
+
+def _conv_ecr_int8(xp, w, *, stride, block_c=0, tile=None):
+    from repro.kernels.tiles import as_tile
+    from repro.quant.ops import ecr_conv_int8
+
+    t = as_tile(tile, block_c)
+    return ecr_conv_int8(xp, w, stride, block_c=t.block_c, block_o=t.block_o)
+
+
+def _conv_bsr_int8(xp, w, *, stride, block_c=0, tile=None):
+    from repro.quant.ops import conv2d_bsr_int8
+
+    return conv2d_bsr_int8(xp, w, stride, tile=tile if tile else None)
+
+
+def _ecr_int8_cost(c, h, w, o, kh, kw, **kw_args):
+    from repro.quant.ops import ecr_conv_int8_cost
+
+    return ecr_conv_int8_cost(c, h, w, o, kh, kw, **kw_args)
+
+
+def _bsr_int8_cost(c, h, w, o, kh, kw, **kw_args):
+    from repro.quant.ops import bsr_conv_int8_cost
+
+    return bsr_conv_int8_cost(c, h, w, o, kh, kw, **kw_args)
 
 
 register_op(OpImpl("conv", "dense", _conv_dense, cost=_conv_cost))
@@ -307,6 +347,10 @@ register_op(OpImpl("conv", "ecr_pallas", _conv_ecr_pallas, cost=_conv_cost,
                    sparse=True, pallas=True, fused_with="pecr_pallas"))
 register_op(OpImpl("conv", "bsr", _conv_bsr, cost=_bsr_cost,
                    weight_sparse=True, pallas=True))
+register_op(OpImpl("conv", "ecr_int8", _conv_ecr_int8, cost=_ecr_int8_cost,
+                   sparse=True, pallas=True, quantized=True))
+register_op(OpImpl("conv", "bsr_int8", _conv_bsr_int8, cost=_bsr_int8_cost,
+                   weight_sparse=True, pallas=True, quantized=True))
 register_op(OpImpl("conv_pool", "unfused", _conv_pool_unfused,
                    cost=_conv_pool_unfused_cost))
 register_op(OpImpl("conv_pool", "pecr", _conv_pool_pecr, cost=_conv_pool_cost,

@@ -21,12 +21,22 @@ def block_schedule(h: jax.Array, bt: int, bf: int):
     return ids, cnt
 
 
-@partial(jax.jit, static_argnames=("block", "interpret"))
-def sparse_matmul(h, w, block=(8, 128, 128), interpret: bool = True):
-    """y = h @ w skipping all-zero (bt,bf) blocks of h. Pads to block multiples."""
+@partial(jax.jit, static_argnames=("block", "interpret", "tile"))
+def sparse_matmul(h, w, block=(8, 128, 128), interpret: bool = True,
+                  tile=None):
+    """y = h @ w skipping all-zero (bt,bf) blocks of h. Pads to block multiples.
+
+    `tile` (a `repro.kernels.tiles.TileConfig`) overrides the (bt, bf, bd)
+    geometry per dimension; a non-conforming dimension (<= 0 or larger than
+    the extent it tiles, up to the one-block padding rule) keeps the
+    `block` default — the same fallback contract as the conv ops."""
     t, f = h.shape
     f2, d = w.shape
     bt, bf, bd = block
+    if tile is not None and tile:
+        bt = tile.bt if 0 < tile.bt <= max(8, t) else bt
+        bf = tile.bf if 0 < tile.bf <= max(8, f) else bf
+        bd = tile.bd if 0 < tile.bd <= max(8, d) else bd
     tp, fp, dp = (-t) % bt, (-f) % bf, (-d) % bd
     hp = jnp.pad(h, ((0, tp), (0, fp)))
     wp = jnp.pad(w, ((0, fp), (0, dp)))

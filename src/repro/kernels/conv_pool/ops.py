@@ -15,13 +15,14 @@ import jax.numpy as jnp
 
 from repro.core.sparsity import block_occupancy, compact_block_ids
 from repro.kernels.conv_pool.kernel import conv_pool_pallas, conv_pool_pallas_batch
-from repro.kernels.ecr_conv.ops import _pick_block_c, batch_block_schedule
+from repro.kernels.ecr_conv.ops import batch_block_schedule
+from repro.kernels.tiles import TileConfig, resolve_conv_tile
 
 
 @partial(jax.jit, static_argnames=("stride", "pool", "p_s", "interpret", "block_c", "block_o", "compact"))
 def fused_conv_pool(x_chw, kernels_oihw, stride: int = 1, pool: int = 2,
                     p_s=None, interpret: bool = True, block_c: int = 0,
-                    block_o: int = 128, compact: bool = True):
+                    block_o: int = 0, compact: bool = True):
     """(C,H,W) x (O,C,kh,kw) -> (O, oh//p, ow//p). p_s must equal pool (kernel form).
     Batched: (N,C,H,W) -> (N, O, oh//p, ow//p) through the native batched grid
     with per-sample channel-block schedules (shared-union compaction)."""
@@ -35,8 +36,11 @@ def fused_conv_pool(x_chw, kernels_oihw, stride: int = 1, pool: int = 2,
     batched = x_chw.ndim == 4
     c, h, w = x_chw.shape[-3:]
     o, c2, kh, kw = kernels_oihw.shape
-    bc = block_c or min(_pick_block_c(h, w, c), max(8, c))
-    bo = min(block_o, max(8, o))
+    # the ONE shared (bc, bo) defaulting rule (repro.kernels.tiles), not a
+    # drifting copy of ecr_conv's — dtype_bytes rides the VMEM-budget pick
+    bc, bo = resolve_conv_tile(h, w, c, o,
+                               TileConfig(block_c=block_c, block_o=block_o),
+                               dtype_bytes=jnp.dtype(x_chw.dtype).itemsize)
     cp, op = (-c) % bc, (-o) % bo
     n_cb = (c + cp) // bc
 

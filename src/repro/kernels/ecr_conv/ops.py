@@ -14,15 +14,12 @@ import jax.numpy as jnp
 
 from repro.core.sparsity import block_occupancy, compact_block_ids
 from repro.kernels.ecr_conv.kernel import ecr_conv_pallas, ecr_conv_pallas_batch
-
-VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # conservative half of v5e VMEM for x tile
-
-
-def _pick_block_c(h: int, w: int, c: int, dtype_bytes: int = 4) -> int:
-    bc = 128
-    while bc > 8 and h * w * bc * dtype_bytes > VMEM_BUDGET_BYTES:
-        bc //= 2
-    return bc
+from repro.kernels.tiles import (  # noqa: F401  (re-exported legacy names)
+    VMEM_BUDGET_BYTES,
+    TileConfig,
+    pick_block_c as _pick_block_c,
+    resolve_conv_tile,
+)
 
 
 def batch_block_schedule(x_nhwc, h, w, bc):
@@ -35,7 +32,7 @@ def batch_block_schedule(x_nhwc, h, w, bc):
 
 @partial(jax.jit, static_argnames=("stride", "interpret", "block_c", "block_o", "compact"))
 def ecr_conv(x_chw, kernels_oihw, stride: int = 1, interpret: bool = True,
-             block_c: int = 0, block_o: int = 128, compact: bool = True):
+             block_c: int = 0, block_o: int = 0, compact: bool = True):
     """(C,H,W) x (O,C,kh,kw) -> (O,oh,ow), skipping dead input channel blocks.
     Batched: (N,C,H,W) -> (N,O,oh,ow) through the native batched grid.
 
@@ -53,8 +50,9 @@ def ecr_conv(x_chw, kernels_oihw, stride: int = 1, interpret: bool = True,
     batched = x_chw.ndim == 4
     c, h, w = x_chw.shape[-3:]
     o, c2, kh, kw = kernels_oihw.shape
-    bc = block_c or min(_pick_block_c(h, w, c), max(8, c))
-    bo = min(block_o, max(8, o))
+    bc, bo = resolve_conv_tile(h, w, c, o,
+                               TileConfig(block_c=block_c, block_o=block_o),
+                               dtype_bytes=jnp.dtype(x_chw.dtype).itemsize)
     cp, op = (-c) % bc, (-o) % bo
     n_cb = (c + cp) // bc
 
@@ -113,14 +111,22 @@ def ecr_conv_cost(c: int, h: int, w: int, o: int, kh: int = 3, kw: int = 3, *,
 def channel_block_occupancy(x_chw, block_c: int = 128, compact: bool = False) -> float:
     """Fraction of live channel blocks = fraction of MXU/DMA work not skipped.
 
+    Measured at the block size `ecr_conv` ACTUALLY resolves for this shape
+    (the `resolve_conv_tile` fallback rule): a block_c that does not divide C
+    pads the tail channels up to a block multiple — never the silent
+    block-size-1 degradation this statistic used to report, which made the
+    stat disagree with the executed schedule on every non-dividing shape.
+
     compact=True reports the post-channel-compaction occupancy the kernel
     actually runs at: ceil(n_live / bc) / n_blocks."""
     import math
 
     c, h, w = x_chw.shape
-    bc = min(block_c, c) if c % min(block_c, c) == 0 else 1
+    bc = resolve_conv_tile(h, w, c, c, TileConfig(block_c=block_c))[0]
+    n_cb = math.ceil(c / bc)
     if compact:
         n_live = int(jnp.any(x_chw != 0, axis=(1, 2)).sum())
-        return math.ceil(n_live / bc) / math.ceil(c / bc)
-    occ = block_occupancy(x_chw.transpose(1, 2, 0), (h, w, bc))
+        return math.ceil(n_live / bc) / n_cb
+    xp = jnp.pad(x_chw, ((0, n_cb * bc - c), (0, 0), (0, 0)))
+    occ = block_occupancy(xp.transpose(1, 2, 0), (h, w, bc))
     return float(occ.mean())

@@ -1,0 +1,143 @@
+"""TileConfig: kernel tile geometry as a first-class, searched quantity.
+
+Every Pallas kernel in this repo tiles its operands — the ECR/PECR conv
+grids over (block_c input-channel, block_o output-channel) blocks, the BSR
+matmul over (bt, bf, bd) blocks — and until now every one of those sizes was
+a hard-coded constant (`block_o=128` everywhere, BSR pinned at
+`(8, 128, 128)`, `_pick_block_c` a static fp32-only heuristic). The paper's
+own results say that is always wrong somewhere: which geometry wins is
+shape- and occupancy-dependent (Figs 9/11), so geometry must be a *planned*
+quantity like the impl choice itself.
+
+This module is the single owner of that geometry:
+
+- `TileConfig` — one frozen, hashable record of every tile knob (0 = "use
+  the current default"), threaded from `obs.tilesearch` winners through
+  `CalibrationDB` -> `plan_network` -> `LayerPlan.tile` -> `run_unit` ->
+  the kernel ops. An all-zero TileConfig is falsy and means "defaults",
+  so legacy `block_c`-only call paths stay bit-identical.
+- `resolve_conv_tile` — THE (bc, bo) defaulting rule the ECR and PECR ops
+  used to duplicate, now shared (and `dtype_bytes`-aware: the VMEM budget
+  is in bytes, so int8 activations fit 4x wider channel blocks).
+- `resolve_bsr_tile` — the (bt, bf, bd) rule for the BSR lowering, with the
+  same contract.
+
+Divisibility fallback contract: a requested tile dimension that does not
+conform to the operand (larger than the dimension it tiles, or <= 0) falls
+back to the CURRENT default for that dimension — never an error, and never
+a silently different schedule than the default path would run. Dimensions
+the requested tile *does* conform to are honored exactly; the ops pad the
+operand up to a block multiple, so conforming means "no more than one
+block of padding", the same rule the hand-fixed defaults satisfy. This is
+also the rule `planner.occupancy_stat` and `channel_block_occupancy`
+resolve through, so the measured statistic and the executed schedule can
+never disagree about the block size (the geometry bug this file fixed).
+
+Stdlib-only (no jax import): sits below kernels/, graph/ and obs/ in the
+import graph so every layer can share it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # conservative half of v5e VMEM for x tile
+
+
+@dataclass(frozen=True)
+class TileConfig:
+    """One kernel-geometry choice. 0 anywhere = the current default.
+
+    block_c / block_o: ECR/PECR conv input- and output-channel block sizes.
+    bt / bf / bd:      BSR matmul row- / reduction- / column-block sizes
+                       (weight output-channel blocks, K-tap blocks, patch
+                       blocks in the conv lowering).
+    An all-zero config is falsy ("all defaults") so `tile or fallback`
+    composes with the legacy block_c-only plumbing.
+    """
+
+    block_c: int = 0
+    block_o: int = 0
+    bt: int = 0
+    bf: int = 0
+    bd: int = 0
+
+    def key(self) -> tuple:
+        """The hashable 5-tuple the CalibrationDB / PlanKey key on."""
+        return (self.block_c, self.block_o, self.bt, self.bf, self.bd)
+
+    def __bool__(self) -> bool:
+        return any(self.key())
+
+    @classmethod
+    def from_key(cls, key) -> "TileConfig":
+        bc, bo, bt, bf, bd = (int(v) for v in key)
+        return cls(block_c=bc, block_o=bo, bt=bt, bf=bf, bd=bd)
+
+
+DEFAULT_TILE = TileConfig()
+
+
+def as_tile(tile=None, block_c: int = 0) -> TileConfig:
+    """Normalize the (tile, legacy block_c) pair every threaded call site
+    carries: an explicit non-default tile wins, else block_c lifts into one."""
+    if tile:
+        return tile
+    return TileConfig(block_c=int(block_c)) if block_c else DEFAULT_TILE
+
+
+def pick_block_c(h: int, w: int, c: int, dtype_bytes: int = 4) -> int:
+    """Largest power-of-two channel block whose (h, w, bc) activation tile
+    fits the VMEM budget — `dtype_bytes` matters: int8 activations fit 4x
+    the channels of fp32 at the same spatial extent."""
+    bc = 128
+    while bc > 8 and h * w * bc * dtype_bytes > VMEM_BUDGET_BYTES:
+        bc //= 2
+    return bc
+
+
+def resolve_block_c(h: int, w: int, c: int, tile: TileConfig | None = None,
+                    dtype_bytes: int = 4) -> int:
+    """The ECR/PECR channel-block size actually run for a (C, h, w) input.
+
+    A requested block_c is honored iff 0 < block_c <= max(8, c) (at most one
+    block of channel padding — the same bound the default satisfies);
+    anything else falls back to the default policy: the VMEM-budget pick,
+    clamped so a small layer is at most one block."""
+    bc = tile.block_c if tile is not None else 0
+    if bc <= 0 or bc > max(8, c):
+        bc = min(pick_block_c(h, w, c, dtype_bytes), max(8, c))
+    return bc
+
+
+def resolve_conv_tile(h: int, w: int, c: int, o: int,
+                      tile: TileConfig | None = None,
+                      dtype_bytes: int = 4) -> tuple:
+    """(bc, bo) for the ECR / PECR conv ops — the one defaulting rule both
+    `ecr_conv` and `fused_conv_pool` resolve through (they used to carry
+    duplicated copies). bo is clamped into [.., max(8, o)] like the
+    hand-fixed default always was; a non-positive request means default."""
+    bc = resolve_block_c(h, w, c, tile, dtype_bytes)
+    bo = tile.block_o if tile is not None and tile.block_o > 0 else 128
+    bo = min(bo, max(8, o))
+    return bc, bo
+
+
+def resolve_bsr_tile(o: int, k_taps: int, p: int,
+                     tile: TileConfig | None = None) -> tuple:
+    """(bt, bf, bd) for the BSR conv lowering of an (O, K) weight against
+    (K, P) patches. Defaults are `sparse_weights.format.weight_block` for
+    (bt, bf) — the geometry the pruner aligned its zeros to — and the
+    largest power of two <= min(128, P) for bd. Each requested dimension is
+    honored iff 0 < dim <= max(8, its operand extent); a non-conforming
+    dimension falls back to ITS default independently (a good bf request
+    must not be discarded because bd was silly)."""
+    from repro.sparse_weights.format import _pow2_le, weight_block
+
+    dbt, dbf = weight_block(o, k_taps)
+    dbd = _pow2_le(min(128, max(1, p)))
+    if tile is None:
+        return dbt, dbf, dbd
+    bt = tile.bt if 0 < tile.bt <= max(8, o) else dbt
+    bf = tile.bf if 0 < tile.bf <= max(8, k_taps) else dbf
+    bd = tile.bd if 0 < tile.bd <= max(8, p) else dbd
+    return bt, bf, bd

@@ -25,6 +25,10 @@ Kernel-level trace + measured cost-model calibration (DESIGN.md §9):
     PYTHONPATH=src python -m repro.launch.serve_cnn --trace-out trace.json
     PYTHONPATH=src python -m repro.launch.serve_cnn --calibrate \\
         --calib-out calibration.json
+Tile-geometry search + int8 quantized placement (DESIGN.md §10):
+    PYTHONPATH=src python -m repro.launch.serve_cnn --tile-search \\
+        --calib-out calibration.json
+    PYTHONPATH=src python -m repro.launch.serve_cnn --int8
 """
 from __future__ import annotations
 
@@ -155,7 +159,8 @@ def serve_cnn(*, model: str = "vgg19", full: bool = False,
               devices: int = 0, prune_density: float = 1.0,
               scenario: str = "steady", seed: int = 0,
               trace_out: str | None = None, calibrate: bool = False,
-              calib_out: str | None = None) -> dict:
+              calib_out: str | None = None, tile_search: bool = False,
+              int8: bool = False, int8_budget: float = 0.98) -> dict:
     graph = serving_graph(model, full)
     params = shift_dead_channels(init_graph(jax.random.PRNGKey(seed), graph))
     # --devices 0 degrades like the Engine's auto policy (largest local
@@ -196,16 +201,39 @@ def serve_cnn(*, model: str = "vgg19", full: bool = False,
                             block_c=block_c)
         report = profile_plan(base, params, calib, tracer=tracer)
         calibration = CalibrationDB.from_report(report)
-        if calib_out:
-            calibration.save(calib_out)
-            log.info("calibration DB written to %s", calib_out)
         log.info("calibrated %d (kind, impl) keys on %s: %s",
                  len(calibration.entries), calibration.device,
                  calibration.summary())
+    tiles = None
+    if tile_search:
+        from repro.obs import tile_search as run_tile_search
+        from repro.pipeline.planner import plan_network
+
+        # search every layer of the base plan at its planned impl; winners
+        # land in the tiles table of the calibration DB (shared with
+        # --calibrate when both are on), and the per-tile fitted constants
+        # make the searched geometries measured-backed in later planning
+        base = plan_network(params, calib, graph, occ_threshold=occ_threshold,
+                            block_c=block_c, calibration=calibration)
+        ts_report, tiles = run_tile_search(base, params, calib,
+                                           db=calibration,
+                                           calibration=calibration,
+                                           tracer=tracer)
+        if calibration is None:
+            calibration = tiles  # the fits double as measured constants
+        log.info("tile search: %d/%d layers improved on defaults "
+                 "(modeled speedup %.3fx, floor holds: %s)",
+                 len(ts_report.improved_layers()), len(ts_report.layers),
+                 ts_report.summary()["model_speedup"],
+                 ts_report.floor_holds())
+    if calib_out and calibration is not None:
+        calibration.save(calib_out)
+        log.info("calibration DB written to %s", calib_out)
     plan = None
     if do_autotune:
         result = autotune(params, calib, graph, thresholds=(0.5, 0.75, 0.9),
-                          block_cs=(0, 8), mesh=mesh, calibration=calibration)
+                          block_cs=(0, 8), mesh=mesh, calibration=calibration,
+                          tiles=tiles, int8=int8, int8_budget=int8_budget)
         plan = result.plan
         log.info("autotune picked occ_threshold=%.2f block_c=%d (model fallback: %s)",
                  result.best.occ_threshold, result.best.block_c, result.used_model)
@@ -213,7 +241,14 @@ def serve_cnn(*, model: str = "vgg19", full: bool = False,
                     occ_threshold=occ_threshold, block_c=block_c,
                     max_batch=max_batch, deadline_s=deadline_ms * 1e-3,
                     clock=clock, replan_band=replan_band, mesh=mesh,
-                    tracer=tracer, calibration=calibration)
+                    tracer=tracer, calibration=calibration, tiles=tiles,
+                    int8=int8, int8_budget=int8_budget)
+    rep8 = engine.plan.int8_report
+    if rep8 is not None:
+        log.info("int8 probe: %d layers quantized (%d demoted), top-1 "
+                 "agreement %.3f, max logit drift %.3g",
+                 len(rep8.layers), len(rep8.demoted), rep8.top1_agreement,
+                 rep8.max_logit_drift)
     log.info("%s plan: %s", graph.name, " ".join(
         f"conv{lp.index + 1}={lp.impl}@{lp.occupancy:.2f}" for lp in engine.plan.layers))
     compiled = engine.warmup()
@@ -242,6 +277,8 @@ def serve_cnn(*, model: str = "vgg19", full: bool = False,
         "devices": engine.n_devices,
         "prune_density": achieved_density,
         "plan_bsr": stats["plan_bsr"],
+        "plan_int8": stats["plan_int8"],
+        "plan_tiled": stats["plan_tiled"],
         "requests": len(results),
         "rate_rps": rate,
         "throughput_rps": len(results) / max(makespan, 1e-9),
@@ -308,8 +345,21 @@ def main():
                          "of measured effective roofline constants, and plan "
                          "the served engine with it (DESIGN.md §9)")
     ap.add_argument("--calib-out", default=None, metavar="PATH",
-                    help="with --calibrate: persist the fitted CalibrationDB "
-                         "as JSON for later --calibrate-free runs to load")
+                    help="with --calibrate/--tile-search: persist the fitted "
+                         "CalibrationDB (constants + tile winners) as JSON "
+                         "for later runs to load")
+    ap.add_argument("--tile-search", action="store_true",
+                    help="search each planned layer's kernel tile geometry "
+                         "(obs.tilesearch), persist measured-best winners, "
+                         "and serve with them stamped on the plan "
+                         "(DESIGN.md §10)")
+    ap.add_argument("--int8", action="store_true",
+                    help="let the planner upgrade sparse/BSR layers to the "
+                         "int8 quantized kernels where the model says they "
+                         "win, gated by the probe accuracy budget")
+    ap.add_argument("--int8-budget", type=float, default=0.98,
+                    help="minimum top-1 agreement vs the fp32 oracle on the "
+                         "calibration batch; int8 layers are demoted until met")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve_cnn(model=args.model, full=args.full, n_requests=args.n_requests,
@@ -319,7 +369,9 @@ def main():
               replan_band=args.replan_band, devices=args.devices,
               prune_density=args.prune_density, scenario=args.scenario,
               seed=args.seed, trace_out=args.trace_out,
-              calibrate=args.calibrate, calib_out=args.calib_out)
+              calibrate=args.calibrate, calib_out=args.calib_out,
+              tile_search=args.tile_search, int8=args.int8,
+              int8_budget=args.int8_budget)
 
 
 if __name__ == "__main__":

@@ -19,13 +19,19 @@ the planner (DESIGN.md §9):
               hard-coded `constants` defaults stay the fallback, so an
               empty DB is bit-identical to no calibration;
 - `constants` the ONE definition of the datasheet roofline pair every
-              modeled time in the repo divides by.
+              modeled time in the repo divides by;
+- `tilesearch` the per-layer kernel-geometry search (`tile_search`): price
+              candidate `TileConfig`s on the (re-measured-occupancy)
+              roofline, wall-time the survivors, persist measured-best
+              winners into the CalibrationDB tiles table for
+              `plan_network(tiles=...)` — closing measure -> search -> plan.
 
-Entry points: `launch/serve_cnn.py --trace-out/--calibrate`,
+Entry points: `launch/serve_cnn.py --trace-out/--calibrate/--tile-search`,
 `benchmarks/cost_model.py` (predicted-vs-measured regression artifact),
+`benchmarks/kernels_micro.py` (tile-search sweep + floor),
 `Engine(tracer=..., calibration=...)` / `Engine.profile()`.
 """
-from repro.obs.calibrate import CalibEntry, CalibrationDB, device_kind
+from repro.obs.calibrate import CalibEntry, CalibrationDB, device_kind, unit_shape_key
 from repro.obs.constants import (
     DEFAULT_HBM_BW,
     DEFAULT_PEAK_FLOPS,
@@ -40,6 +46,14 @@ from repro.obs.profile import (
     profile_plan,
     time_callable,
 )
+from repro.obs.tilesearch import (
+    LayerTileSearch,
+    TileCandidate,
+    TileSearchReport,
+    layer_tile_candidates,
+    search_layer,
+    tile_search,
+)
 from repro.obs.trace import NULL_TRACER, NullTracer, Tracer
 
 __all__ = [
@@ -48,15 +62,21 @@ __all__ = [
     "DEFAULT_HBM_BW",
     "DEFAULT_PEAK_FLOPS",
     "DEFAULT_ROOFLINE",
+    "LayerTileSearch",
     "LayerTiming",
     "NULL_TRACER",
     "NullTracer",
     "PROFILE_IMPLS",
     "ProfileReport",
     "RooflineConstants",
+    "TileCandidate",
+    "TileSearchReport",
     "TimingResult",
     "Tracer",
     "device_kind",
+    "layer_tile_candidates",
     "profile_plan",
+    "search_layer",
+    "tile_search",
     "time_callable",
 ]

@@ -7,7 +7,7 @@ wildly different fractions of the roofline, and the dense-vs-sparse
 crossover moves with them (the measured-not-assumed point of
 Pietroń & Żurek, arXiv:2011.06295). The DB stores, per
 
-    (device kind x op kind x impl x block geometry)      — PlanKey-style
+    (device kind x op kind x impl x tile geometry)        — PlanKey-style
 
 an EFFECTIVE `RooflineConstants` pair fitted from `profile_plan`
 measurements, and every modeled time in the repo (`unit_model_us`,
@@ -15,6 +15,18 @@ measurements, and every modeled time in the repo (`unit_model_us`,
 arbitration) consults it through an explicit `calibration=` parameter — the
 hard-coded defaults remain the fallback for any key the DB does not cover,
 so an EMPTY DB reproduces the uncalibrated behavior bit-identically.
+
+The geometry axis is the full `TileConfig` 5-tuple key (block_c, block_o,
+bt, bf, bd); the pre-tile (block_c,)-keyed entries embed as
+(block_c, 0, 0, 0, 0), which is also how a v1 JSON loads. Lookup walks
+exact tile -> block_c-only -> geometry-agnostic (all-zero), so a coarse fit
+covers finer keys until one is measured.
+
+The DB also carries the TILE-SEARCH winners table (`put_tile`/`best_tile`):
+per (device, op kind, impl, layer shape) the measured-best `TileConfig` key
+that `obs.tilesearch` found — this is the persisted half of the
+measure -> search -> plan loop, consulted by `plan_network(tiles=...)` so a
+plan built tomorrow starts from today's measured-best geometry.
 
 Fit model: one efficiency scalar per key. A kernel is assumed to run at a
 fixed fraction `s` of the datasheet roofline (both ceilings scaled
@@ -43,6 +55,32 @@ def device_kind() -> str:
     return getattr(dev, "device_kind", dev.platform)
 
 
+def unit_shape_key(unit) -> tuple:
+    """The layer-shape key the tile winners table is indexed by: everything
+    that determines a conv unit's kernel geometry problem — (c, h, w, o, k,
+    stride, pool). Duck-typed over `graph.ir.ConvUnit` so obs stays free of
+    a graph import; two units with equal keys face the identical search
+    space, whatever network they sit in."""
+    c, h, w = unit.in_shape
+    conv = unit.conv
+    pool = unit.pool.p if unit.pool is not None else 0
+    return (int(c), int(h), int(w), int(conv.c_out), int(conv.k),
+            int(conv.stride), int(pool))
+
+
+def _tile_key(block_c: int = 0, tile=None) -> tuple:
+    """Normalize (block_c, tile) to the canonical 5-tuple geometry key."""
+    if tile is not None and tile:
+        return tuple(int(v) for v in tile.key())
+    return (int(block_c), 0, 0, 0, 0)
+
+
+def _fmt_tkey(tkey: tuple) -> str:
+    if not any(tkey[1:]):
+        return f"bc{tkey[0]}"
+    return "t" + ".".join(str(v) for v in tkey)
+
+
 @dataclass(frozen=True)
 class CalibEntry:
     """One fitted key: the effective constants plus fit diagnostics."""
@@ -58,17 +96,21 @@ class CalibEntry:
 
 
 class CalibrationDB:
-    """{(device_kind, kind, impl, block_c): CalibEntry} with default fallback.
+    """{(device_kind, kind, impl, tile_key): CalibEntry} with default fallback,
+    plus {(device_kind, kind, impl, shape_key): tile_key} search winners.
 
-    `lookup` tries the exact block geometry first, then the geometry-agnostic
-    `block_c=0` entry (a fit at auto block size covers explicit sizes until
-    one is measured), then gives up (None -> caller uses the defaults).
+    `lookup` tries the exact tile geometry first, then the block_c-only key
+    (a fit at one channel-block size covers searched (block_o, bt, bf, bd)
+    refinements until one is measured), then the geometry-agnostic all-zero
+    key, then gives up (None -> caller uses the defaults).
     `device` pins the device axis; entries fitted on other device kinds are
     never consulted (a CPU calibration must not steer a TPU plan).
     """
 
-    def __init__(self, entries: dict | None = None, device: str | None = None):
+    def __init__(self, entries: dict | None = None, device: str | None = None,
+                 tiles: dict | None = None):
         self.entries: dict = dict(entries or {})
+        self.tiles: dict = dict(tiles or {})
         self.device = device
 
     def __len__(self) -> int:
@@ -76,8 +118,9 @@ class CalibrationDB:
 
     def __bool__(self) -> bool:
         # an empty DB is falsy ON PURPOSE: `calibration or None` normalizes
-        # "no calibration" and "nothing fitted yet" to the same fallback
-        return bool(self.entries)
+        # "no calibration" and "nothing fitted yet" to the same fallback;
+        # a DB holding only tile winners still counts as calibration
+        return bool(self.entries) or bool(self.tiles)
 
     def _device(self) -> str:
         if self.device is None:
@@ -85,50 +128,88 @@ class CalibrationDB:
         return self.device
 
     def put(self, kind: str, impl: str, block_c: int, entry: CalibEntry,
-            device: str | None = None) -> None:
-        self.entries[(device or self._device(), kind, impl, int(block_c))] = entry
+            device: str | None = None, tile=None) -> None:
+        key = (device or self._device(), kind, impl, _tile_key(block_c, tile))
+        self.entries[key] = entry
 
     def lookup(self, kind: str, impl: str, block_c: int = 0,
-               device: str | None = None) -> RooflineConstants | None:
+               device: str | None = None, tile=None) -> RooflineConstants | None:
         dev = device or self._device()
-        for bc in (int(block_c), 0):
-            e = self.entries.get((dev, kind, impl, bc))
+        tkey = _tile_key(block_c, tile)
+        chain = [tkey]
+        if any(tkey[1:]):
+            chain.append((tkey[0], 0, 0, 0, 0))  # block_c-only fit
+        if tkey[0] != 0 or any(tkey[1:]):
+            chain.append((0, 0, 0, 0, 0))  # geometry-agnostic fit
+        for k in chain:
+            e = self.entries.get((dev, kind, impl, k))
             if e is not None:
                 return e.constants()
         return None
 
     def covers(self, kind: str, impl: str, block_c: int = 0,
-               device: str | None = None) -> bool:
-        return self.lookup(kind, impl, block_c, device) is not None
+               device: str | None = None, tile=None) -> bool:
+        return self.lookup(kind, impl, block_c, device, tile=tile) is not None
 
     def constants_for(self, kind: str, impl: str, block_c: int = 0,
-                      device: str | None = None) -> RooflineConstants:
+                      device: str | None = None, tile=None) -> RooflineConstants:
         """The effective constants for a key: calibrated, else the defaults
         (the one resolution rule every modeled time goes through)."""
-        return self.lookup(kind, impl, block_c, device) or DEFAULT_ROOFLINE
+        return self.lookup(kind, impl, block_c, device, tile=tile) \
+            or DEFAULT_ROOFLINE
+
+    # -- tile-search winners ---------------------------------------------------
+
+    def put_tile(self, kind: str, impl: str, shape_key: tuple, tile,
+                 device: str | None = None) -> None:
+        """Record the measured-best geometry for one (impl, layer shape).
+        `tile` is a TileConfig (or its 5-tuple key); an all-zero/None tile
+        means "defaults won" and ERASES any stored winner instead of storing
+        a no-op row."""
+        key = (device or self._device(), kind, impl, tuple(shape_key))
+        tkey = _tile_key(0, tile) if not isinstance(tile, tuple) else \
+            tuple(int(v) for v in tile)
+        if not any(tkey):
+            self.tiles.pop(key, None)
+        else:
+            self.tiles[key] = tkey
+
+    def best_tile(self, kind: str, impl: str, shape_key: tuple,
+                  device: str | None = None):
+        """The stored winner as a `TileConfig`, or None when the defaults are
+        (or are assumed) best — callers can pass the result straight to
+        `run_unit(..., tile=...)` either way."""
+        tkey = self.tiles.get(
+            (device or self._device(), kind, impl, tuple(shape_key)))
+        if tkey is None:
+            return None
+        from repro.kernels.tiles import TileConfig
+
+        return TileConfig.from_key(tkey)
 
     # -- fitting -------------------------------------------------------------
 
     def fit_report(self, report) -> "CalibrationDB":
-        """Fold a `ProfileReport` in: one entry per (kind, impl, block_c)
+        """Fold a `ProfileReport` in: one entry per (kind, impl, geometry)
         group, scale = median(predicted_default / measured) (see module
         docstring). Returns self (chainable)."""
         for (kind, impl), rows in report.by_impl().items():
-            by_bc: dict = {}
+            by_tk: dict = {}
             for t in rows:
-                by_bc.setdefault(int(t.block_c), []).append(t)
-            for bc, grp in by_bc.items():
+                tk = tuple(getattr(t, "tile", ()) or ()) \
+                    or (int(t.block_c), 0, 0, 0, 0)
+                by_tk.setdefault(tk, []).append(t)
+            for tk, grp in by_tk.items():
                 ratios = sorted(t.ratio for t in grp)
                 s = _median(ratios)
                 if s <= 0.0:
                     continue  # degenerate measurement; keep the defaults
                 spread = (ratios[-1] - ratios[0]) / max(s, 1e-12)
-                self.put(kind, impl, bc, CalibEntry(
+                self.entries[(report.device_kind, kind, impl, tk)] = CalibEntry(
                     peak_flops=DEFAULT_ROOFLINE.peak_flops * s,
                     hbm_bw=DEFAULT_ROOFLINE.hbm_bw * s,
                     scale=float(s), n_samples=len(grp),
-                    resid_spread=float(spread)),
-                    device=report.device_kind)
+                    resid_spread=float(spread))
         if self.device is None:
             self.device = report.device_kind
         return self
@@ -140,11 +221,15 @@ class CalibrationDB:
     # -- persistence ----------------------------------------------------------
 
     def to_json(self) -> dict:
-        return {"schema": "calibration-v1", "device": self.device,
+        return {"schema": "calibration-v2", "device": self.device,
                 "entries": [
-                    {"device": d, "kind": k, "impl": i, "block_c": bc,
+                    {"device": d, "kind": k, "impl": i, "tile": list(tk),
                      **asdict(e)}
-                    for (d, k, i, bc), e in sorted(self.entries.items())]}
+                    for (d, k, i, tk), e in sorted(self.entries.items())],
+                "tiles": [
+                    {"device": d, "kind": k, "impl": i, "shape": list(sk),
+                     "tile": list(tk)}
+                    for (d, k, i, sk), tk in sorted(self.tiles.items())]}
 
     def save(self, path: str) -> str:
         with open(path, "w") as f:
@@ -156,23 +241,33 @@ class CalibrationDB:
     def load(cls, path: str) -> "CalibrationDB":
         with open(path) as f:
             payload = json.load(f)
-        if payload.get("schema") != "calibration-v1":
+        schema = payload.get("schema")
+        if schema not in ("calibration-v1", "calibration-v2"):
             raise ValueError(f"{path}: not a calibration DB "
-                             f"(schema={payload.get('schema')!r})")
+                             f"(schema={schema!r})")
         db = cls(device=payload.get("device"))
         for row in payload["entries"]:
-            db.put(row["kind"], row["impl"], row["block_c"],
-                   CalibEntry(peak_flops=row["peak_flops"],
-                              hbm_bw=row["hbm_bw"], scale=row["scale"],
-                              n_samples=row["n_samples"],
-                              resid_spread=row["resid_spread"]),
-                   device=row["device"])
+            # v1 rows carry "block_c"; v2 rows the full "tile" 5-tuple
+            tk = tuple(row["tile"]) if "tile" in row else \
+                (int(row["block_c"]), 0, 0, 0, 0)
+            db.entries[(row["device"], row["kind"], row["impl"], tk)] = \
+                CalibEntry(peak_flops=row["peak_flops"],
+                           hbm_bw=row["hbm_bw"], scale=row["scale"],
+                           n_samples=row["n_samples"],
+                           resid_spread=row["resid_spread"])
+        for row in payload.get("tiles", []):
+            db.tiles[(row["device"], row["kind"], row["impl"],
+                      tuple(row["shape"]))] = tuple(row["tile"])
         return db
 
     def summary(self) -> dict:
         """JSON-ready digest (scales per key) for logs and BENCH extras."""
-        return {f"{d}/{k}/{i}/bc{bc}": round(e.scale, 6)
-                for (d, k, i, bc), e in sorted(self.entries.items())}
+        out = {f"{d}/{k}/{i}/{_fmt_tkey(tk)}": round(e.scale, 6)
+               for (d, k, i, tk), e in sorted(self.entries.items())}
+        for (d, k, i, sk), tk in sorted(self.tiles.items()):
+            out[f"{d}/{k}/{i}/shape{'x'.join(map(str, sk))}"] = \
+                _fmt_tkey(tk)
+        return out
 
 
 def _median(sorted_vals) -> float:

@@ -97,6 +97,7 @@ class LayerTiming:
     predicted_us: float  # unit_model_us at the DEFAULT constants
     flops: float  # the registry's modeled cost (the calibration fit input)
     bytes: float
+    tile: tuple = ()  # TileConfig.key() when timed at a searched geometry
 
     @property
     def ratio(self) -> float:
@@ -106,6 +107,7 @@ class LayerTiming:
 
     def row(self) -> dict:
         return {"layer": self.index, "kind": self.kind, "impl": self.impl,
+                "tile": list(self.tile),
                 "occupancy": round(self.occupancy, 4),
                 "weight_density": round(self.weight_density, 4),
                 "measured_us": round(self.measured_us, 2),
@@ -178,10 +180,15 @@ class ProfileReport:
         unit_by_index = {u.index: u for u in self.units}
         rows = []
         for t in self.timings:
+            tile = None
+            if t.tile:
+                from repro.kernels.tiles import TileConfig
+
+                tile = TileConfig.from_key(t.tile)
             pred = unit_model_us(
                 t.kind, t.impl, unit_by_index[t.index], occupancy=t.occupancy,
                 weight_density=t.weight_density, batch=t.batch,
-                block_c=t.block_c, calibration=calibration)
+                block_c=t.block_c, tile=tile, calibration=calibration)
             rows.append(replace(t, predicted_us=pred))
         return replace(self, timings=tuple(rows))
 

@@ -36,6 +36,7 @@ from repro.graph import as_graph
 from repro.graph.executor import run_head, run_unit
 from repro.graph.ir import ConvSpec, LayerGraph, PoolSpec, graph_weights
 from repro.graph.registry import fusion_eligible, get_op, unit_model_us
+from repro.kernels.tiles import TileConfig, resolve_block_c
 
 
 @dataclass(frozen=True)
@@ -54,6 +55,7 @@ class LayerPlan:
     relu: bool = True  # adjacent ReLU present
     pool: PoolSpec | None = None  # adjacent pool node (None = in-stage conv)
     weight_density: float = 1.0  # measured BSR block density of the params
+    tile: TileConfig | None = None  # searched kernel geometry (None = defaults)
 
     def to_unit(self):
         """The `ConvUnit` this plan entry executes. The LayerPlan is the
@@ -77,11 +79,14 @@ class PipelinePlan:
     occ_threshold: float
     block_c: int  # 0 = auto per layer (ops._pick_block_c)
     graph: LayerGraph | None = None  # the IR the plan was made for
+    int8_report: object = None  # quant.Int8Report when int8 planning probed
 
     def counts(self) -> dict:
-        c = {"dense": 0, "sparse": 0, "fused": 0, "bsr": 0}
+        c = {"dense": 0, "sparse": 0, "fused": 0, "bsr": 0, "int8": 0}
         for lp in self.layers:
             op = get_op(lp.kind, lp.impl)
+            if op.quantized:
+                c["int8"] += 1  # counted in its own bucket AND its family's
             if op.weight_sparse:
                 c["bsr"] += 1
             elif op.sparse:
@@ -93,12 +98,18 @@ class PipelinePlan:
         return c
 
 
-def occupancy_stat(x, block_c: int = 0, n_valid=None):
+def occupancy_stat(x, block_c: int = 0, n_valid=None, tile=None,
+                   dtype_bytes: int = 4):
     """Traced (jit-safe) channel-block occupancy, measured the way the batched
     kernel schedules: shared-union channel compaction, then PER-SAMPLE block
     occupancy on the packed layout (== mean_b cnt_b / n_cb of
     `batch_block_schedule`). For one image this reduces to the compacted
     ceil(n_live / bc) / n_cb of DESIGN.md §2.2.
+
+    The block size is the one the kernel ACTUALLY resolves for this shape
+    (`resolve_block_c` — same rule, same fallbacks), so the statistic and
+    the executed schedule can never disagree about the geometry; `tile`
+    (a TileConfig) takes precedence over the legacy `block_c` scalar.
 
     x: (N,C,H,W) or (C,H,W). `n_valid` (optional, traced) restricts the
     statistic to the first `n_valid` samples — the serving engine measures
@@ -109,13 +120,11 @@ def occupancy_stat(x, block_c: int = 0, n_valid=None):
     and a count beyond the batch cannot deflate the mean. Returns a scalar
     array (fraction of channel-block work NOT skipped).
     """
-    from repro.kernels.ecr_conv.ops import _pick_block_c
-
     if x.ndim == 3:
         x = x[None]
     n, c, h, w = x.shape
-    bc = block_c or min(_pick_block_c(h, w, c), max(8, c))
-    bc = min(bc, c)
+    t = tile if tile is not None and tile else TileConfig(block_c=block_c)
+    bc = resolve_block_c(h, w, c, t, dtype_bytes)
     n_cb = -(-c // bc)
     live = jnp.any(x != 0, axis=(2, 3))  # (N, C) per-sample live channels
     if n_valid is not None:
@@ -131,9 +140,10 @@ def occupancy_stat(x, block_c: int = 0, n_valid=None):
     return jnp.where(jnp.arange(n) < nv, per_sample, 0.0).sum() / jnp.maximum(nv, 1)
 
 
-def measure_occupancy(x, block_c: int = 0) -> float:
+def measure_occupancy(x, block_c: int = 0, tile=None,
+                      dtype_bytes: int = 4) -> float:
     """Concrete-value wrapper of `occupancy_stat` (see its docstring)."""
-    return float(occupancy_stat(x, block_c))
+    return float(occupancy_stat(x, block_c, tile=tile, dtype_bytes=dtype_bytes))
 
 
 def plan_network(
@@ -146,6 +156,9 @@ def plan_network(
     use_pallas: bool = True,
     bsr_threshold: float = 0.5,
     calibration=None,
+    tiles=None,
+    int8: bool = False,
+    int8_budget: float = 0.98,
 ) -> PipelinePlan:
     """Walk the graph's conv units on a calibration batch, emit the schedule.
 
@@ -175,7 +188,29 @@ def plan_network(
     device-specific crossover the hard-coded constants cannot see). The
     re-check only fires for (kind, impl) keys the DB actually covers, so an
     empty or absent DB reproduces the uncalibrated plan bit-identically.
+
+    `tiles` (a `CalibrationDB`, typically the one `obs.tilesearch.tile_search`
+    persisted winners into — it may be the same object as `calibration`)
+    closes the measure -> search -> plan loop: after the (kind, impl) choice,
+    the layer's shape is looked up in the winners table and the stored
+    measured-best `TileConfig` is stamped onto `LayerPlan.tile`, with the
+    occupancy re-measured at that geometry so the recorded statistic matches
+    the schedule the kernel will actually run. No stored winner (or no
+    `tiles`) leaves `tile=None` — the impl's default geometry, bit-identical
+    to before.
+
+    `int8=True` adds the PRECISION axis: a layer placed on a Pallas sparse or
+    BSR impl is upgraded to its int8 sibling (`ecr_int8` / `bsr_int8`) iff
+    the quantized roofline time wins — with occupancy re-measured at the
+    int8 geometry (dtype_bytes=1 fits 4x wider channel blocks) and the int8
+    impl's own stored tile winner. Because quantization trades accuracy, the
+    upgrades are then PROBED: planned logits vs the dense fp32 oracle on the
+    calibration batch, and int8 layers are demoted back to their fp32 choice
+    (least modeled saving first) until top-1 agreement >= `int8_budget`.
+    The probe lands on the plan as `plan.int8_report` (an `Int8Report`,
+    mirroring how pruning reports `PruneReport`).
     """
+    from repro.obs.calibrate import unit_shape_key
     from repro.sparse_weights import weight_block_density
 
     graph = as_graph(graph)
@@ -186,6 +221,8 @@ def plan_network(
     sparse_conv = "ecr_pallas" if use_pallas else "ecr"
     conv_ws, _ = graph_weights(params)
     layers = []
+    fp32_alt: dict = {}  # conv index -> the (kind, impl, tile, occ) int8 displaced
+    q_saving: dict = {}  # conv index -> modeled us the int8 upgrade saved
     x = calib
     batch = int(calib.shape[0])
     for unit, w in zip(graph.units(), conv_ws):
@@ -219,6 +256,38 @@ def plan_network(
                                    calibration=calibration)
             if bsr_us < base_us:
                 kind, impl = "conv", "bsr"
+        tile = None
+        if tiles is not None and get_op(kind, impl).pallas:
+            stored = tiles.best_tile(kind, impl, unit_shape_key(unit))
+            if stored:
+                tile = stored
+                if get_op(kind, impl).sparse:
+                    # the stat must describe the schedule the winner runs
+                    occ = measure_occupancy(x, block_c, tile=tile)
+        if int8 and use_pallas:
+            op = get_op(kind, impl)
+            q_impl = "bsr_int8" if op.weight_sparse else (
+                "ecr_int8" if op.sparse else None)
+            if q_impl is not None:
+                q_tile = tiles.best_tile("conv", q_impl, unit_shape_key(unit)) \
+                    if tiles is not None else None
+                q_occ = occ
+                if get_op("conv", q_impl).sparse:
+                    # int8 operands fit 4x wider channel blocks per VMEM
+                    q_occ = measure_occupancy(x, block_c, tile=q_tile,
+                                              dtype_bytes=1)
+                base_us = unit_model_us(kind, impl, unit, occupancy=occ,
+                                        weight_density=wd, batch=batch,
+                                        block_c=block_c, tile=tile,
+                                        calibration=calibration)
+                q_us = unit_model_us("conv", q_impl, unit, occupancy=q_occ,
+                                     weight_density=wd, batch=batch,
+                                     block_c=block_c, tile=q_tile,
+                                     calibration=calibration)
+                if q_us < base_us:
+                    fp32_alt[unit.index] = (kind, impl, tile, occ)
+                    q_saving[unit.index] = base_us - q_us
+                    kind, impl, tile, occ = "conv", q_impl, q_tile, q_occ
         # the dense oracle produces the next calibration input
         x = run_unit(x, w, unit, "conv", "dense")
         layers.append(
@@ -235,10 +304,57 @@ def plan_network(
                 relu=unit.relu,
                 pool=unit.pool,
                 weight_density=wd,
+                tile=tile,
             )
         )
-    return PipelinePlan(layers=tuple(layers), occ_threshold=occ_threshold,
+    plan = PipelinePlan(layers=tuple(layers), occ_threshold=occ_threshold,
                         block_c=block_c, graph=graph)
+    if int8:
+        plan = _probe_int8(plan, params, calib, fp32_alt, q_saving,
+                           int8_budget)
+    return plan
+
+
+def _probe_int8(plan: PipelinePlan, params, calib, fp32_alt: dict,
+                q_saving: dict, budget: float) -> PipelinePlan:
+    """Accuracy-gate a plan's int8 placements (`plan_network(int8=True)`).
+
+    Probe: planned logits vs the dense fp32 oracle on the calibration batch
+    (the fp32 plan is exact vs dense — DESIGN.md §3 — so ALL drift here is
+    quantization). While top-1 agreement < `budget`, demote the int8 layer
+    with the least modeled saving back to its recorded fp32 alternative and
+    re-probe. The loop terminates: with every int8 layer demoted the plan is
+    fp32-exact and agreement is 1.0. Returns the plan with `int8_report`."""
+    from dataclasses import replace
+
+    from repro.graph.executor import run_graph
+    from repro.quant import Int8Report
+
+    def probe(p):
+        got = run_plan(p, params, calib)
+        ref = run_graph(p.graph, params, calib, "dense")
+        agree = float((jnp.argmax(got, -1) == jnp.argmax(ref, -1)).mean())
+        drift = float(jnp.max(jnp.abs(got - ref)))
+        return agree, drift
+
+    agree, drift = probe(plan)
+    demoted = []
+    order = sorted(fp32_alt, key=lambda i: q_saving[i])  # cheapest give-back
+    layers = list(plan.layers)
+    while agree < budget and order:
+        i = order.pop(0)
+        kind, impl, tile, occ = fp32_alt[i]
+        pos = next(p for p, lp in enumerate(layers) if lp.index == i)
+        layers[pos] = replace(layers[pos], kind=kind, impl=impl, tile=tile,
+                              occupancy=occ)
+        demoted.append(i)
+        plan = replace(plan, layers=tuple(layers))
+        agree, drift = probe(plan)
+    report = Int8Report(
+        layers=tuple(i for i in sorted(fp32_alt) if i not in demoted),
+        max_logit_drift=drift, top1_agreement=agree,
+        demoted=tuple(demoted))
+    return replace(plan, int8_report=report)
 
 
 def _plan_graph(plan: PipelinePlan, fallback=None) -> LayerGraph:
@@ -340,9 +456,11 @@ def run_plan(plan: PipelinePlan, params, imgs, ccfg=None, *,
     x = imgs
     occs = []
     for lp, w in zip(plan.layers, conv_ws):
+        lp_tile = getattr(lp, "tile", None)
         if collect_occupancy:
-            occs.append(occupancy_stat(x, plan.block_c, n_valid))
-        x = run_unit(x, w, lp.to_unit(), lp.kind, lp.impl, plan.block_c)
+            occs.append(occupancy_stat(x, plan.block_c, n_valid, tile=lp_tile))
+        x = run_unit(x, w, lp.to_unit(), lp.kind, lp.impl, plan.block_c,
+                     tile=lp_tile)
     logits = run_head(x, dense_ws, graph.head())
     if collect_occupancy:
         occs = jnp.stack(occs)

@@ -1,0 +1,34 @@
+"""int8 quantized kernel family: absmax quantization, int8 ECR/BSR Pallas
+kernels, and the planner-facing cost hooks + accuracy report (DESIGN.md §10).
+"""
+from repro.quant.ops import (
+    Int8Report,
+    bsr_conv_int8_cost,
+    conv2d_bsr_int8,
+    conv2d_bsr_int8_ref,
+    ecr_conv_int8,
+    ecr_conv_int8_cost,
+    ecr_conv_int8_ref,
+)
+from repro.quant.quantize import (
+    absmax_scale,
+    dequantize_int8,
+    quantize_acts,
+    quantize_int8,
+    quantize_weights,
+)
+
+__all__ = [
+    "Int8Report",
+    "absmax_scale",
+    "bsr_conv_int8_cost",
+    "conv2d_bsr_int8",
+    "conv2d_bsr_int8_ref",
+    "dequantize_int8",
+    "ecr_conv_int8",
+    "ecr_conv_int8_cost",
+    "ecr_conv_int8_ref",
+    "quantize_acts",
+    "quantize_int8",
+    "quantize_weights",
+]

@@ -1,0 +1,58 @@
+"""Symmetric absmax int8 quantization helpers (the repo's one quant scheme).
+
+scale = absmax / 127, q = clip(round(x / scale), -127, 127): zero maps to
+zero exactly — load-bearing for this repo, because every sparsity mechanism
+(ECR dead channel blocks, BSR pruned weight blocks) detects zeros, and a
+quantizer that perturbed them would change the SCHEDULE, not just the values.
+The int8 kernels accumulate in int32 (exact), so
+
+    int8_kernel(xq, wq) == conv(xq.astype(f32), wq.astype(f32)) * sx * sw
+
+bit-for-bit while per-output sums stay under 2^24 — which is what the
+`*_ref` oracles in `repro.quant.ops` compute and the tests pin tightly.
+
+Granularity: activations get ONE scale per tensor (per sample when batched —
+a whole feature map shares post-ReLU dynamics), weights get one scale PER
+OUTPUT CHANNEL (`axis=(1,2,3)` over (O,C,kh,kw) — each filter has its own
+range, and per-channel scales ride into the kernels as (1, block_o)/(bt, 1)
+operand tiles so the rescale fuses into the accumulator flush).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def absmax_scale(x, axis=None, keepdims: bool = False):
+    """Symmetric scale(s): absmax / 127 over `axis` (None = whole tensor).
+    Floored away from zero so an all-zero slice divides cleanly (its
+    quantized values are exact zeros either way)."""
+    m = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=keepdims)
+    return jnp.maximum(m, 1e-12) / INT8_MAX
+
+
+def quantize_int8(x, scale):
+    """clip(round(x / scale)) -> int8. `scale` broadcasts against x."""
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_weights(w):
+    """(O,C,kh,kw) -> (wq int8, sw (O,) per-output-channel scales)."""
+    sw = absmax_scale(w, axis=(1, 2, 3))
+    return quantize_int8(w, sw[:, None, None, None]), sw
+
+
+def quantize_acts(x, per_sample: bool = False):
+    """x (C,H,W) or (N,C,H,W) -> (xq int8, sx scale). per_sample=True gives
+    one scale per batch sample (shape (N,)); else one scalar."""
+    if per_sample:
+        sx = absmax_scale(x, axis=tuple(range(1, x.ndim)))
+        return quantize_int8(x, sx.reshape((-1,) + (1,) * (x.ndim - 1))), sx
+    sx = absmax_scale(x)
+    return quantize_int8(x, sx), sx

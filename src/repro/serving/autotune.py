@@ -83,7 +83,9 @@ def plan_model_us(plan: PipelinePlan, params, batch: int = 1,
         us += unit_model_us(lp.kind, lp.impl, lp.to_unit(),
                             occupancy=lp.occupancy,
                             weight_density=lp.weight_density, batch=batch,
-                            block_c=plan.block_c, calibration=calibration)
+                            block_c=plan.block_c,
+                            tile=getattr(lp, "tile", None),
+                            calibration=calibration)
     # classifier: flatten -> dense head GEMMs
     flops = 0.0
     nbytes = 0.0
@@ -131,7 +133,8 @@ def autotune(params, calib, graph=None, *,
              thresholds=(0.0, 0.5, 0.75, 0.9), block_cs=(0, 8),
              iters: int = 3, warmup: int = 1, noise_tol: float = 0.25,
              use_pallas: bool = True, mode: str = "auto",
-             mesh=None, calibration=None) -> AutotuneResult:
+             mesh=None, calibration=None, tiles=None, int8: bool = False,
+             int8_budget: float = 0.98) -> AutotuneResult:
     """Grid-search (occ_threshold, block_c); return the plan that serves the
     calibration batch fastest. `graph` is a LayerGraph or legacy CNNConfig
     (None = full VGG-19).
@@ -155,6 +158,11 @@ def autotune(params, calib, graph=None, *,
     calibrated `plan_model_us` (a populated DB also retires the dense-plan
     HLO path — measured per-impl constants beat re-deriving the default
     roofline from lowered HLO). None keeps today's behavior exactly.
+
+    `tiles` / `int8` / `int8_budget` pass straight through to `plan_network`:
+    every candidate plan is built with the stored tile-search winners stamped
+    and (when int8=True) the probe-gated quantized upgrades applied, so the
+    search ranks the plans that would actually serve.
     """
     graph = as_graph(graph)
     if calib.ndim == 3:
@@ -168,7 +176,8 @@ def autotune(params, calib, graph=None, *,
         for bc in block_cs:
             plan = plan_network(params, calib, graph, occ_threshold=th,
                                 block_c=bc, use_pallas=use_pallas,
-                                calibration=calibration)
+                                calibration=calibration, tiles=tiles,
+                                int8=int8, int8_budget=int8_budget)
             sig = plan_key(calib.shape[0], plan)
             if sig in seen:  # same schedule == same executable: reuse timing
                 cands.append(Candidate(th, bc, plan, *seen[sig]))

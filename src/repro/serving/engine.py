@@ -124,7 +124,8 @@ class Engine:
                  replan_cooldown: int = 2, replan_async: bool = False,
                  cache_entries: int = 32, cache: PlanCache | None = None,
                  metrics: MetricsTracker | None = None,
-                 sim_service_s=None, tracer=None, calibration=None):
+                 sim_service_s=None, tracer=None, calibration=None,
+                 tiles=None, int8: bool = False, int8_budget: float = 0.98):
         # tracer: a repro.obs.trace.Tracer recording plan/compile/execute/
         # re-plan spans (DESIGN.md §9); the NULL_TRACER default is a shared
         # no-op object, so the untraced hot path allocates nothing.
@@ -132,8 +133,16 @@ class Engine:
         # engine builds (initial, drift re-plans, hot-swap re-plans) prices
         # its impl choices at the measured effective constants; None (or an
         # empty DB) keeps the datasheet defaults bit-identically.
+        # tiles: a CalibrationDB carrying tile-search winners — every plan
+        # this engine builds stamps the stored measured-best geometry per
+        # layer (plan_network(tiles=...)); often the same DB as calibration.
+        # int8/int8_budget: let every plan upgrade layers to the quantized
+        # impls under the probe-agreement budget (plan_network(int8=...)).
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.calibration = calibration
+        self.tiles = tiles
+        self.int8 = bool(int8)
+        self.int8_budget = float(int8_budget)
         graph = plan.graph if plan is not None and plan.graph is not None \
             else as_graph(graph if graph is not None else ccfg)
         if plan is None:
@@ -144,7 +153,9 @@ class Engine:
                 plan = plan_network(params, calib, graph,
                                     occ_threshold=occ_threshold,
                                     block_c=block_c, use_pallas=use_pallas,
-                                    calibration=calibration)
+                                    calibration=calibration, tiles=tiles,
+                                    int8=self.int8,
+                                    int8_budget=self.int8_budget)
         # mesh="auto": 1-D data mesh over the largest local-device prefix
         # dividing max_batch (all devices when they divide; fewer on awkward
         # hosts rather than refusing to construct); a 1-device mesh (every
@@ -288,6 +299,9 @@ class Engine:
             "plan_sparse": c["sparse"],
             "plan_dense": c["dense"],
             "plan_bsr": c["bsr"],
+            "plan_int8": c["int8"],
+            "plan_tiled": sum(1 for lp in self.plan.layers
+                              if getattr(lp, "tile", None)),
             "occ_ema": [float(v) for v in np.round(self._occ_ema, 4)],
             **{k: v for k, v in self.metrics.latency.percentiles_ms().items()
                if k != "count"},
@@ -439,7 +453,9 @@ class Engine:
                                        occ_threshold=plan.occ_threshold,
                                        block_c=plan.block_c,
                                        use_pallas=self.use_pallas,
-                                       calibration=self.calibration)
+                                       calibration=self.calibration,
+                                       tiles=self.tiles, int8=self.int8,
+                                       int8_budget=self.int8_budget)
             except Exception:
                 # a failed re-plan must neither wedge the drift detector nor
                 # take down the serving loop — keep the current plan, count
@@ -510,7 +526,9 @@ class Engine:
                                     occ_threshold=self.plan.occ_threshold,
                                     block_c=self.plan.block_c,
                                     use_pallas=self.use_pallas,
-                                    calibration=self.calibration)
+                                    calibration=self.calibration,
+                                    tiles=self.tiles, int8=self.int8,
+                                    int8_budget=self.int8_budget)
         with self._lock:
             self._plan_gen += 1
             self._pending_plan = None

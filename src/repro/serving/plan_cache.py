@@ -40,6 +40,7 @@ class PlanKey:
     graph_sig: tuple = ()  # LayerGraph.signature() — the network's structure
     mesh_shape: tuple = ()  # ((axis, size), ...) of the data mesh; () = 1 device
     weight_sig: tuple = ()  # (layer index, rounded density) per BSR layer
+    tile_sig: tuple = ()  # (layer index, TileConfig.key()) per tiled layer
 
 
 def plan_key(bucket: int, plan, mesh=None) -> PlanKey:
@@ -57,6 +58,13 @@ def plan_key(bucket: int, plan, mesh=None) -> PlanKey:
     variant the other's entry. Only weight-sparse layers contribute (density
     rounded to 2 dp — the granularity pruning actually achieves), so every
     dense/ECR plan keeps the exact key it had before weight sparsity existed.
+
+    The tile signature does the same for SEARCHED kernel geometry: a layer
+    whose plan carries a non-default `TileConfig` compiles a different Pallas
+    grid, so two plans differing only in tile geometry must not share an
+    executable. Only layers with a non-default tile contribute, so every
+    default-geometry plan keeps the exact key it had before tile search
+    existed.
     """
     from repro.graph.registry import get_op
 
@@ -66,10 +74,14 @@ def plan_key(bucket: int, plan, mesh=None) -> PlanKey:
     weight_sig = tuple(
         (lp.index, round(getattr(lp, "weight_density", 1.0), 2))
         for lp in plan.layers if get_op(lp.kind, lp.impl).weight_sparse)
+    tile_sig = tuple(
+        (lp.index, lp.tile.key()) for lp in plan.layers
+        if getattr(lp, "tile", None) is not None and lp.tile)
     return PlanKey(bucket=int(bucket), block_c=int(plan.block_c),
                    occ_sig=tuple((lp.kind, lp.impl) for lp in plan.layers),
                    graph_sig=graph.signature() if graph is not None else (),
-                   mesh_shape=mesh_shape, weight_sig=weight_sig)
+                   mesh_shape=mesh_shape, weight_sig=weight_sig,
+                   tile_sig=tile_sig)
 
 
 class PlanCache:

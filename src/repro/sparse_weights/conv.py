@@ -32,7 +32,8 @@ import jax.numpy as jnp
 from repro.core.sparsity import extract_windows
 from repro.kernels.bsr_matmul.kernel import bsr_matmul_pallas
 from repro.kernels.bsr_matmul.ops import block_schedule
-from repro.sparse_weights.format import _pow2_le, conv_weight_matrix, weight_block
+from repro.kernels.tiles import resolve_bsr_tile
+from repro.sparse_weights.format import conv_weight_matrix
 
 
 def conv2d_bsr_ref(x, w, stride: int = 1):
@@ -43,8 +44,8 @@ def conv2d_bsr_ref(x, w, stride: int = 1):
     return conv2d_dense(x, w, stride)
 
 
-@partial(jax.jit, static_argnames=("stride", "interpret"))
-def conv2d_bsr(x, w, stride: int = 1, interpret: bool = True):
+@partial(jax.jit, static_argnames=("stride", "interpret", "tile"))
+def conv2d_bsr(x, w, stride: int = 1, interpret: bool = True, tile=None):
     """Weight-block-sparse conv. x: (C,H,W) or (N,C,H,W) already padded
     (VALID semantics, like every registry conv forward); w: (O,C,kh,kw).
     Returns float32 (O,oh,ow) / (N,O,oh,ow).
@@ -53,6 +54,13 @@ def conv2d_bsr(x, w, stride: int = 1, interpret: bool = True):
     planner's job is exactly this trade: BSR wins when the static weight
     density undercuts the measured activation occupancy (`plan_network`'s
     joint cost comparison), and loses to ECR/PECR on very sparse inputs.
+
+    `tile` (a `repro.kernels.tiles.TileConfig`) overrides the (bt, bf, bd)
+    block geometry per dimension (`resolve_bsr_tile`'s fallback contract);
+    the (ids, cnt) schedule is computed on the actual weight VALUES at the
+    resolved tiling, so any geometry is numerically exact — a tile finer
+    than the pruner's `weight_block` just skips MORE blocks, a coarser one
+    fewer.
     """
     single = x.ndim == 3
     if single:
@@ -64,9 +72,8 @@ def conv2d_bsr(x, w, stride: int = 1, interpret: bool = True):
     _, oh, ow, k_taps = wins.shape
     a = wins.reshape(n * oh * ow, k_taps)  # (P, K) patches
     wm = conv_weight_matrix(w).astype(jnp.float32)  # (O, K)
-    bt, bf = weight_block(o, k_taps)
     p = a.shape[0]
-    bd = _pow2_le(min(128, p))  # patch-dim tile, shrunk for tiny maps
+    bt, bf, bd = resolve_bsr_tile(o, k_taps, p, tile)
     wm_p = jnp.pad(wm, ((0, (-o) % bt), (0, (-k_taps) % bf)))
     at_p = jnp.pad(a, ((0, (-p) % bd), (0, (-k_taps) % bf))).T  # (Kp, Pp)
     ids, cnt = block_schedule(wm_p, bt, bf)

@@ -258,8 +258,8 @@ def test_report_agreement_and_recalibration():
     # recalibrated() needs the units to re-predict -> exercise the scales
     # directly: predicted/scale reproduces the measured ordering
     dense, ecr = report.timings
-    s_dense = db.entries[("testdev", "conv", "dense", 8)].scale
-    s_ecr = db.entries[("testdev", "conv", "ecr_pallas", 8)].scale
+    s_dense = db.entries[("testdev", "conv", "dense", (8, 0, 0, 0, 0))].scale
+    s_ecr = db.entries[("testdev", "conv", "ecr_pallas", (8, 0, 0, 0, 0))].scale
     assert dense.predicted_us / s_dense < ecr.predicted_us / s_ecr
 
 

@@ -1,0 +1,234 @@
+"""int8 quantized kernel family (DESIGN.md §10): absmax quantization bounds,
+kernel-vs-ref agreement (tight — int32 accumulation is exact, so the Pallas
+kernel and the plain-JAX quantized oracle compute the SAME math), ref-vs-fp32
+accuracy (the error the budget governs), and the planner's probe-gated int8
+placement with demotion."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vgg19_sparse import CNNConfig, vgg19_graph
+from repro.core import dead_channel_band, synth_feature_map
+from repro.graph import init_graph
+from repro.graph.registry import get_op
+from repro.kernels.ecr_conv.ops import ecr_conv
+from repro.models.cnn import shift_dead_channels
+from repro.pipeline import plan_network, run_plan
+from repro.quant import (
+    absmax_scale,
+    conv2d_bsr_int8,
+    conv2d_bsr_int8_ref,
+    dequantize_int8,
+    ecr_conv_int8,
+    ecr_conv_int8_ref,
+    quantize_int8,
+    quantize_weights,
+)
+from repro.sparse_weights import prune_graph_params
+
+
+def _fm(shape, sparsity, seed=0):
+    return synth_feature_map(jax.random.PRNGKey(seed), shape, sparsity)
+
+
+# ---------------------------------------------------------------------------
+# quantization primitives
+# ---------------------------------------------------------------------------
+
+
+def test_absmax_roundtrip_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64,)) * 3.0
+    s = absmax_scale(x)
+    xq = quantize_int8(x, s)
+    assert xq.dtype == jnp.int8
+    # symmetric absmax: |x - dq(q(x))| <= scale/2, and the max hits +-127
+    err = jnp.abs(dequantize_int8(xq, s) - x)
+    assert float(err.max()) <= float(s) / 2 + 1e-7
+    assert int(jnp.abs(xq).max()) == 127
+
+
+def test_zero_maps_to_zero_exactly():
+    # load-bearing for sparsity: a dead channel must quantize to exact zeros
+    # so the (ids, cnt) schedules still skip it
+    x = jnp.zeros((4, 6, 6)).at[0].set(1.0)
+    s = absmax_scale(x)
+    xq = quantize_int8(x, s)
+    assert int(jnp.abs(xq[1:]).sum()) == 0
+    assert float(jnp.abs(dequantize_int8(xq, s)[1:]).sum()) == 0.0
+
+
+def test_quantize_weights_per_output_channel():
+    w = jax.random.normal(jax.random.PRNGKey(1), (6, 4, 3, 3))
+    w = w.at[3].multiply(100.0)  # one huge channel must not crush the others
+    wq, sw = quantize_weights(w)
+    assert sw.shape == (6,)
+    for i in range(6):
+        np.testing.assert_allclose(
+            np.asarray(dequantize_int8(wq[i], sw[i])), np.asarray(w[i]),
+            atol=float(sw[i]) / 2 + 1e-7)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs quantized oracle: tight; oracle vs fp32: the accuracy budget
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sparsity", [0.0, 0.5, 1.0])
+def test_ecr_int8_kernel_matches_ref(sparsity):
+    x = _fm((16, 12, 12), sparsity)
+    k = jax.random.normal(jax.random.PRNGKey(2), (24, 16, 3, 3))
+    out = ecr_conv_int8(x, k)
+    ref = ecr_conv_int8_ref(x, k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ecr_int8_batched_matches_ref():
+    x = jnp.stack([_fm((16, 12, 12), 0.5, seed=s) for s in range(3)])
+    k = jax.random.normal(jax.random.PRNGKey(3), (24, 16, 3, 3))
+    out = ecr_conv_int8(x, k)
+    ref = ecr_conv_int8_ref(x, k)
+    assert out.shape == (3, 24, 10, 10)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ecr_int8_tile_override_matches_ref():
+    x = _fm((16, 12, 12), 0.5, seed=4)
+    k = jax.random.normal(jax.random.PRNGKey(5), (24, 16, 3, 3))
+    out = ecr_conv_int8(x, k, block_c=12, block_o=8)
+    ref = ecr_conv_int8_ref(x, k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ecr_int8_vs_fp32_tolerance():
+    x = _fm((16, 12, 12), 0.5, seed=6)
+    k = jax.random.normal(jax.random.PRNGKey(7), (24, 16, 3, 3))
+    q = ecr_conv_int8(x, k)
+    f = ecr_conv(x, k)
+    # ~1% of the output scale: 8-bit operands, per-channel weight scales
+    scale = float(jnp.abs(f).max())
+    assert float(jnp.abs(q - f).max()) <= 0.05 * scale
+
+
+def test_bsr_int8_kernel_matches_ref_and_fp32():
+    w = jax.random.normal(jax.random.PRNGKey(8), (24, 16, 3, 3))
+    x = _fm((16, 12, 12), 0.3, seed=9)
+    out = conv2d_bsr_int8(x, w)
+    ref = conv2d_bsr_int8_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+    from repro.sparse_weights import conv2d_bsr_ref
+
+    f = conv2d_bsr_ref(x, w)
+    assert float(jnp.abs(out - f).max()) <= 0.05 * float(jnp.abs(f).max())
+
+
+def test_bsr_int8_batched():
+    w = jax.random.normal(jax.random.PRNGKey(10), (24, 16, 3, 3))
+    x = jnp.stack([_fm((16, 12, 12), 0.3, seed=s) for s in range(2)])
+    out = conv2d_bsr_int8(x, w)
+    ref = conv2d_bsr_int8_ref(x, w)
+    assert out.shape == (2, 24, 10, 10)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# registry + planner: the precision axis
+# ---------------------------------------------------------------------------
+
+TINY2 = CNNConfig(name="vgg-quant-tiny", in_channels=16, img_size=12,
+                  plan=((8, 2),), n_classes=4)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return vgg19_graph(TINY2)
+
+
+@pytest.fixture(scope="module")
+def params(graph):
+    return shift_dead_channels(init_graph(jax.random.PRNGKey(0), graph))
+
+
+@pytest.fixture(scope="module")
+def calib(graph):
+    c, h, w = graph.in_shape
+    return dead_channel_band(
+        jax.random.uniform(jax.random.PRNGKey(1), (2, c, h, w)), 0.5)
+
+
+def test_int8_impls_registered_quantized():
+    assert get_op("conv", "ecr_int8").quantized
+    assert get_op("conv", "ecr_int8").sparse
+    assert get_op("conv", "bsr_int8").quantized
+    assert get_op("conv", "bsr_int8").weight_sparse
+    assert not get_op("conv", "ecr_pallas").quantized
+
+
+def test_plan_network_int8_off_is_unchanged(graph, params, calib):
+    base = plan_network(params, calib, graph, occ_threshold=0.75, block_c=8)
+    assert base.int8_report is None
+    assert all(not get_op(lp.kind, lp.impl).quantized for lp in base.layers)
+
+
+def test_plan_network_int8_upgrade_and_probe(graph, params, calib):
+    base = plan_network(params, calib, graph, occ_threshold=0.75, block_c=8)
+    assert base.layers[0].impl == "ecr_pallas"  # in-stage conv: unfusable
+    p8 = plan_network(params, calib, graph, occ_threshold=0.75, block_c=8,
+                      int8=True)
+    rep = p8.int8_report
+    assert rep is not None
+    assert 0 in rep.layers and rep.demoted == ()
+    assert p8.layers[0].impl == "ecr_int8"
+    assert p8.counts()["int8"] == len(rep.layers)
+    assert rep.top1_agreement >= 0.98  # the default budget held
+    # the probe's recorded drift is real: re-check against the fp32 plan
+    lb = run_plan(base, params, calib)
+    l8 = run_plan(p8, params, calib)
+    drift = float(jnp.abs(lb - l8).max())
+    assert 0 < drift <= rep.max_logit_drift + 1e-6
+
+
+def test_plan_network_int8_demotes_to_meet_budget(graph, params, calib):
+    # budget > 1.0 is unreachable with ANY drift -> every upgrade demotes
+    # and the plan is fp32-exact again
+    p = plan_network(params, calib, graph, occ_threshold=0.75, block_c=8,
+                     int8=True, int8_budget=1.1)
+    rep = p.int8_report
+    assert rep.layers == () and len(rep.demoted) >= 1
+    assert all(not get_op(lp.kind, lp.impl).quantized for lp in p.layers)
+    base = plan_network(params, calib, graph, occ_threshold=0.75, block_c=8)
+    assert jnp.array_equal(run_plan(p, params, calib),
+                           run_plan(base, params, calib))
+
+
+def test_plan_network_bsr_int8_on_pruned(graph, params, calib):
+    pruned, _ = prune_graph_params(params, 0.3, graph)
+    pb = plan_network(pruned, calib, graph, occ_threshold=0.75, block_c=8)
+    assert any(lp.impl == "bsr" for lp in pb.layers)
+    pq = plan_network(pruned, calib, graph, occ_threshold=0.75, block_c=8,
+                      int8=True)
+    assert any(lp.impl == "bsr_int8" for lp in pq.layers)
+    # int8 counts in its own bucket AND the bsr family's
+    c = pq.counts()
+    assert c["int8"] >= 1 and c["bsr"] >= c["int8"]
+    lb = run_plan(pb, pruned, calib)
+    lq = run_plan(pq, pruned, calib)
+    assert float(jnp.abs(lb - lq).max()) <= \
+        pq.int8_report.max_logit_drift + 1e-6
+
+
+def test_int8_cost_hooks_price_below_fp32():
+    from repro.graph.registry import unit_model_us
+
+    g = vgg19_graph(TINY2)
+    u = list(g.units())[0]
+    for fp, q in [(("conv", "ecr_pallas"), ("conv", "ecr_int8")),
+                  (("conv", "bsr"), ("conv", "bsr_int8"))]:
+        f = unit_model_us(*fp, u, occupancy=0.5, weight_density=0.5, batch=2)
+        i8 = unit_model_us(*q, u, occupancy=0.5, weight_density=0.5, batch=2)
+        assert i8 < f

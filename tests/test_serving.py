@@ -414,7 +414,7 @@ def test_occ_threshold_zero_yields_all_dense_plan(params):
     plan = plan_network(params, calib, TINY, occ_threshold=0.0)
     assert all(lp.impl == "dense" for lp in plan.layers)
     assert plan.counts() == {"dense": len(plan.layers), "sparse": 0, "fused": 0,
-                             "bsr": 0}
+                             "bsr": 0, "int8": 0}
 
 
 def test_explicit_block_c_override_honored_end_to_end(params, monkeypatch):

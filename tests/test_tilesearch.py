@@ -1,0 +1,191 @@
+"""Tile-geometry search (DESIGN.md §10): candidate grids conform to the
+layer, the winner rule's by-construction floor (modeled AND measured time
+<= the default geometry's), winner persistence + erasure in the
+CalibrationDB tiles table (with v1 schema compat), and the closed loop —
+`plan_network(tiles=db)` stamps the stored winner and the plan cache keys
+on it."""
+import jax
+import jax.numpy as jnp
+import json
+import pytest
+
+from repro.configs.vgg19_sparse import CNNConfig, vgg19_graph
+from repro.core import dead_channel_band
+from repro.graph import init_graph
+from repro.graph.ir import graph_weights
+from repro.kernels.tiles import DEFAULT_TILE, TileConfig
+from repro.models.cnn import shift_dead_channels
+from repro.obs import (
+    CalibrationDB,
+    layer_tile_candidates,
+    search_layer,
+    tile_search,
+    unit_shape_key,
+)
+from repro.pipeline import plan_network, run_plan
+from repro.serving import plan_key
+
+TINY = CNNConfig(name="vgg-tilesearch-tiny", in_channels=16, img_size=12,
+                 plan=((8, 1), (16, 1)), n_classes=4)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return vgg19_graph(TINY)
+
+
+@pytest.fixture(scope="module")
+def params(graph):
+    return shift_dead_channels(init_graph(jax.random.PRNGKey(0), graph))
+
+
+@pytest.fixture(scope="module")
+def calib(graph):
+    c, h, w = graph.in_shape
+    return dead_channel_band(
+        jax.random.uniform(jax.random.PRNGKey(1), (2, c, h, w)), 0.5)
+
+
+@pytest.fixture(scope="module")
+def plan(graph, params, calib):
+    return plan_network(params, calib, graph, occ_threshold=0.75, block_c=8)
+
+
+@pytest.fixture(scope="module")
+def searched(plan, params, calib):
+    return tile_search(plan, params, calib, iters=2, warmup=1, max_timed=2)
+
+
+def test_candidates_conform_and_default_first(graph):
+    units = list(graph.units())
+    cands = layer_tile_candidates(units[0], "conv", "ecr_pallas", batch=2)
+    assert cands[0] == DEFAULT_TILE
+    c, o = units[0].in_shape[0], units[0].conv.c_out
+    for t in cands[1:]:
+        assert 0 < t.block_c <= max(8, c) and 0 < t.block_o <= max(8, o)
+        assert t.bt == t.bf == t.bd == 0
+    bsr = layer_tile_candidates(units[0], "conv", "bsr", batch=2)
+    assert bsr[0] == DEFAULT_TILE
+    for t in bsr[1:]:
+        assert t.block_c == t.block_o == 0
+        assert t.bt > 0 and t.bf > 0 and t.bd > 0
+
+
+def test_search_layer_floor_and_shape(graph, params, calib):
+    unit = list(graph.units())[0]
+    conv_ws, _ = graph_weights(params)
+    r = search_layer(unit, conv_ws[0], calib, "conv", "ecr_pallas",
+                     iters=2, warmup=1, max_timed=2)
+    assert r.shape_key == unit_shape_key(unit)
+    assert r.default.timed  # the default is ALWAYS wall-timed
+    assert r.best.timed
+    # the winner rule's floor: modeled AND measured <= the default's
+    assert r.best.model_us <= r.default.model_us
+    assert r.best.measured_us <= r.default.measured_us
+    keys = [c.key for c in r.candidates]
+    assert DEFAULT_TILE.key() in keys and len(keys) == len(set(keys))
+    row = r.row()
+    assert row["n_timed"] >= 1 and row["n_candidates"] == len(r.candidates)
+
+
+def test_search_layer_non_pallas_is_trivial(graph, params, calib):
+    unit = list(graph.units())[0]
+    conv_ws, _ = graph_weights(params)
+    r = search_layer(unit, conv_ws[0], calib, "conv", "dense")
+    assert r.best == r.default and len(r.candidates) == 1
+    assert not r.best.timed and not r.improved
+
+
+def test_tile_search_report_and_floor(searched, plan):
+    report, db = searched
+    assert len(report.layers) == len(plan.layers)
+    assert report.floor_holds()
+    s = report.summary()
+    assert s["layers"] == len(plan.layers) and s["floor_holds"]
+    assert s["model_speedup"] >= 1.0  # winner modeled <= default everywhere
+    # fit=True wrote measured-backed entries for every timed geometry
+    assert any(k[3] == (0, 0, 0, 0, 0) for k in db.entries)
+
+
+def test_tile_search_persists_only_pallas_winners(searched, plan):
+    report, db = searched
+    pallas_shapes = {r.shape_key for r in report.layers
+                     if r.best.key != DEFAULT_TILE.key()}
+    for (dev, kind, impl, shape), tkey in db.tiles.items():
+        assert shape in pallas_shapes and any(tkey)
+
+
+def test_default_winner_erases_stale_entry(plan, params, calib, graph):
+    db = CalibrationDB(device="cpu")
+    lp = next(lp for lp in plan.layers if lp.impl != "dense")
+    unit = list(graph.units())[lp.index]
+    sk = unit_shape_key(unit)
+    db.put_tile(lp.kind, lp.impl, sk, TileConfig(block_c=8, block_o=8))
+    assert db.best_tile(lp.kind, lp.impl, sk) is not None
+    db.put_tile(lp.kind, lp.impl, sk, DEFAULT_TILE)  # defaults won -> erase
+    assert db.best_tile(lp.kind, lp.impl, sk) is None
+    db.put_tile(lp.kind, lp.impl, sk, None)  # None behaves like all-zero
+    assert not db.tiles
+
+
+def test_db_roundtrip_with_tiles(tmp_path, searched):
+    _, db = searched
+    db.put_tile("conv", "ecr_pallas", (16, 12, 12, 8, 3, 1, 2),
+                TileConfig(block_c=12, block_o=8))
+    p = db.save(str(tmp_path / "cal.json"))
+    db2 = CalibrationDB.load(p)
+    assert db2.entries == db.entries
+    assert db2.tiles == db.tiles
+    t = db2.best_tile("conv", "ecr_pallas", (16, 12, 12, 8, 3, 1, 2))
+    assert t == TileConfig(block_c=12, block_o=8)
+
+
+def test_db_v1_schema_compat(tmp_path):
+    v1 = {"schema": "calibration-v1", "device": "cpu",
+          "entries": [{"device": "cpu", "kind": "conv", "impl": "dense",
+                       "block_c": 8, "peak_flops": 1e12, "hbm_bw": 1e11,
+                       "scale": 0.5, "n_samples": 3, "resid_spread": 0.1}]}
+    p = tmp_path / "v1.json"
+    p.write_text(json.dumps(v1))
+    db = CalibrationDB.load(str(p))
+    # v1's block_c key embeds as the 5-tuple (bc, 0, 0, 0, 0); no tiles table
+    assert ("cpu", "conv", "dense", (8, 0, 0, 0, 0)) in db.entries
+    assert db.tiles == {}
+    assert db.lookup("conv", "dense", 8) is not None
+
+
+def test_plan_network_stamps_stored_winner(graph, params, calib, plan):
+    db = CalibrationDB(device="cpu")
+    lp = next(lp for lp in plan.layers if lp.impl != "dense")
+    unit = list(graph.units())[lp.index]
+    win = TileConfig(block_c=8, block_o=8)
+    db.put_tile(lp.kind, lp.impl, unit_shape_key(unit), win)
+    tiled = plan_network(params, calib, graph, occ_threshold=0.75, block_c=8,
+                         tiles=db)
+    assert tiled.layers[lp.index].tile == win
+    assert all(t.tile is None for i, t in enumerate(tiled.layers)
+               if i != lp.index)
+    # the stamped geometry executes exactly (tile exactness is pinned in
+    # test_tiles.py; here: the planned path end to end)
+    ref = run_plan(plan, params, calib)
+    out = run_plan(tiled, params, calib)
+    assert float(jnp.abs(out - ref).max()) <= 1e-4
+    # compiled programs are cached PER GEOMETRY: the key must differ
+    assert plan_key(2, tiled) != plan_key(2, plan)
+    assert plan_key(2, tiled).tile_sig == ((lp.index, win.key()),)
+
+
+def test_tile_search_then_plan_closes_loop(searched, graph, params, calib,
+                                           plan):
+    """The full loop: search -> persist -> plan consults the winners table.
+    Every stamped tile must be exactly the stored winner for that layer."""
+    report, db = searched
+    tiled = plan_network(params, calib, graph, occ_threshold=0.75, block_c=8,
+                         tiles=db)
+    for lp in tiled.layers:
+        stored = db.best_tile(lp.kind, lp.impl,
+                              unit_shape_key(list(graph.units())[lp.index]))
+        assert lp.tile == stored
+    out = run_plan(tiled, params, calib)
+    ref = run_plan(plan, params, calib)
+    assert float(jnp.abs(out - ref).max()) <= 1e-4
