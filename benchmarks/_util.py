@@ -7,10 +7,9 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import synth_feature_map, window_stats
+from repro.core import synth_feature_map
 
 # v5e-class roofline constants — ONE definition, in repro.obs.constants
 # (re-exported by the registry, the cost dispatch every planner/autotune

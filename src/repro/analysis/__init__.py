@@ -1,0 +1,53 @@
+"""repro.analysis: diagnostics-coded static verification (DESIGN.md §12).
+
+Verifies graphs, plans and Pallas launch geometry WITHOUT compiling or
+executing anything: `verify_plan(plan, params)` returns structured
+`Diagnostic` records with stable RPAxxx codes; `assert_plan_ok` raises a
+`PlanVerificationError` (a ValueError) on error-severity findings. The
+planner, the plan cache and the serving engine's hot-swap/re-plan paths all
+verify through here; `python -m repro.analysis.cli` (repro-lint) sweeps the
+model zoo from the command line.
+"""
+from repro.analysis.diagnostics import (
+    CODES,
+    Diagnostic,
+    DiagnosticSink,
+    diag,
+    diagnostics_json,
+    errors,
+    format_diagnostics,
+    sort_diagnostics,
+)
+from repro.analysis.launch import (
+    check_bsr_launch,
+    check_conv_launch,
+    check_launch,
+)
+from repro.analysis.plan import check_launch_descriptor, check_plan
+from repro.analysis.schedules import check_schedule, schedule_ok
+from repro.analysis.verify import (
+    PlanVerificationError,
+    assert_plan_ok,
+    verify_plan,
+)
+
+__all__ = [
+    "CODES",
+    "Diagnostic",
+    "DiagnosticSink",
+    "PlanVerificationError",
+    "assert_plan_ok",
+    "check_bsr_launch",
+    "check_conv_launch",
+    "check_launch",
+    "check_launch_descriptor",
+    "check_plan",
+    "check_schedule",
+    "diag",
+    "diagnostics_json",
+    "errors",
+    "format_diagnostics",
+    "schedule_ok",
+    "sort_diagnostics",
+    "verify_plan",
+]

@@ -1,0 +1,130 @@
+"""repro-lint: sweep the model zoo through the static verifier.
+
+For each selected model this mirrors the serving launcher's setup exactly
+(same reduced graphs, same synthetic dead-channel calibration batch, same
+pruning path), plans the network, and verifies the plan + params WITHOUT
+serving anything. Exit status is nonzero iff any error-severity diagnostic
+fires, so CI can gate on it.
+
+Run:
+    PYTHONPATH=src python -m repro.analysis.cli --model lenet
+    PYTHONPATH=src python -m repro.analysis.cli --model all \\
+        --prune-density 0.3 --int8 --json
+    PYTHONPATH=src python -m repro.analysis.cli --dead-imports
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.deadcode import check_dead_imports
+from repro.analysis.diagnostics import (
+    DiagnosticSink,
+    errors,
+    format_diagnostics,
+    sort_diagnostics,
+)
+from repro.analysis.verify import PlanVerificationError, verify_plan
+
+
+def lint_model(model: str, *, full: bool = False, prune_density: float = 1.0,
+               int8: bool = False, occ_threshold: float = 0.75,
+               block_c: int = 0, seed: int = 0) -> dict:
+    """Plan one zoo model the way `serve_cnn` would and verify the result.
+    Returns {"model", "plan", "diagnostics"} (diagnostics as Diagnostic
+    objects; the caller formats)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.graph import init_graph
+    from repro.launch.serve_cnn import serving_graph, synth_requests
+    from repro.models.cnn import shift_dead_channels
+    from repro.pipeline.planner import plan_network
+
+    graph = serving_graph(model, full)
+    params = shift_dead_channels(init_graph(jax.random.PRNGKey(seed), graph))
+    calib = jnp.stack(synth_requests(graph, 2, seed=seed + 1))
+    if prune_density < 1.0:
+        from repro.sparse_weights import prune_graph_params
+
+        params, _ = prune_graph_params(params, prune_density, graph,
+                                       probe=calib)
+    try:
+        plan = plan_network(params, calib, graph, occ_threshold=occ_threshold,
+                            block_c=block_c, int8=int8)
+    except PlanVerificationError as e:
+        # plan_network itself verifies before returning — surface its
+        # findings instead of a traceback so the sweep keeps going
+        return {"model": graph.name, "plan": None,
+                "diagnostics": list(e.diagnostics)}
+    diags = verify_plan(plan, params, batch=int(calib.shape[0]))
+    return {"model": graph.name,
+            "plan": {"layers": [f"{lp.kind}/{lp.impl}" for lp in plan.layers],
+                     **plan.counts()},
+            "diagnostics": diags}
+
+
+def main(argv=None) -> int:
+    from repro.launch.serve_cnn import MODELS
+
+    ap = argparse.ArgumentParser(
+        prog="repro-lint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--model", choices=MODELS + ("all",), default="all",
+                    help="which zoo model to lint (default: the whole zoo)")
+    ap.add_argument("--full", action="store_true",
+                    help="full network depth (slow on CPU)")
+    ap.add_argument("--prune-density", type=float, default=1.0,
+                    help="magnitude-prune to this BSR block density before "
+                         "planning (1.0 = no pruning)")
+    ap.add_argument("--int8", action="store_true",
+                    help="plan with int8 upgrades (probed, like serving)")
+    ap.add_argument("--occ-threshold", type=float, default=0.75)
+    ap.add_argument("--block-c", type=int, default=0,
+                    help="channel-block size (0 = auto)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dead-imports", action="store_true",
+                    help="also report modules unreachable from the CNN "
+                         "spine (RPA901, info)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output (one JSON document)")
+    args = ap.parse_args(argv)
+
+    models = MODELS if args.model == "all" else (args.model,)
+    reports = [lint_model(m, full=args.full,
+                          prune_density=args.prune_density, int8=args.int8,
+                          occ_threshold=args.occ_threshold,
+                          block_c=args.block_c, seed=args.seed)
+               for m in models]
+    if args.dead_imports:
+        sink = DiagnosticSink()
+        src = Path(__file__).resolve().parents[2]  # .../src
+        check_dead_imports(src, sink)
+        reports.append({"model": "<repo>", "plan": None,
+                        "diagnostics": sink.items})
+
+    n_err = sum(len(errors(r["diagnostics"])) for r in reports)
+    if args.as_json:
+        doc = {"n_errors": n_err,
+               "reports": [{**r, "diagnostics": [
+                   d.to_json() for d in sort_diagnostics(r["diagnostics"])]}
+                   for r in reports]}
+        print(json.dumps(doc, indent=2))
+    else:
+        for r in reports:
+            n_e = len(errors(r["diagnostics"]))
+            verdict = "FAIL" if n_e else "ok"
+            print(f"== {r['model']}: {verdict} "
+                  f"({n_e} errors, {len(r['diagnostics']) - n_e} notes)")
+            if r["plan"]:
+                print(f"   plan: {' '.join(r['plan']['layers'])}")
+            out = format_diagnostics(r["diagnostics"])
+            if out:
+                print("\n".join(f"   {line}" for line in out.splitlines()))
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,80 @@
+"""(ids, cnt) schedule invariants — RPA207.
+
+The ECR compression (`compact_block_ids`, `block_schedule`,
+`batch_block_schedule`) always produces schedules satisfying:
+
+  - 0 <= cnt <= n_blocks            (the kernel loops cnt times)
+  - every id in [0, n_blocks)       (ids index block gathers — an
+                                     out-of-range id is an OOB DMA)
+  - ids[:cnt] strictly increasing   (argsort over a boolean mask is stable,
+                                     so live blocks keep original order;
+                                     duplicates would double-accumulate)
+
+Entries BEYOND cnt are padding and deliberately unconstrained beyond the
+range check (both builders pad with an arbitrary valid id so speculative
+gathers stay in bounds — `compact_block_ids` uses order[0], `block_schedule`
+the row's first live id, and the conv compact path identity ids).
+
+These checks run on CONCRETE values (numpy), so they apply to the static
+schedules — BSR weight schedules, which are compile-time constants once the
+params are — and to eager test values. Traced activations have no values to
+check; `repro.analysis.plan` skips them, and the run-time `guard_schedule`
+clamp (`REPRO_CHECK_SCHEDULES=1`) covers the traced path instead.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.diagnostics import DiagnosticSink
+
+
+def check_schedule(ids, cnt, n_blocks: int, sink: DiagnosticSink, *,
+                   layer: int | None = None, kind: str = "",
+                   impl: str = "") -> None:
+    """Verify one schedule: ids (n,) with scalar cnt, or ids (rows, n) with
+    cnt (rows,) — the per-row-block (BSR) / per-sample (batched conv) forms.
+    Appends RPA207 diagnostics for every violated invariant."""
+    loc = dict(layer=layer, kind=kind, impl=impl)
+    ids = np.asarray(ids)
+    cnt = np.asarray(cnt)
+    if ids.ndim == 1:
+        ids, cnt = ids[None], cnt.reshape(1)
+    if ids.ndim != 2 or cnt.shape != (ids.shape[0],):
+        sink.add("RPA207",
+                 f"schedule shape mismatch: ids {ids.shape} with cnt "
+                 f"{cnt.shape} (want (rows, n) ids with (rows,) cnt)", **loc)
+        return
+    if n_blocks <= 0:
+        sink.add("RPA207", f"schedule over n_blocks={n_blocks} (must be >= 1)",
+                 **loc)
+        return
+    for r in range(ids.shape[0]):
+        row, c = ids[r], int(cnt[r])
+        tag = f"row {r}: " if ids.shape[0] > 1 else ""
+        if not 0 <= c <= n_blocks:
+            sink.add("RPA207",
+                     f"{tag}cnt={c} outside [0, n_blocks={n_blocks}] — the "
+                     f"kernel would loop past the schedule",
+                     hint="cnt counts live blocks; it can never exceed the "
+                          "grid", **loc)
+            continue
+        if row.size and (row.min() < 0 or row.max() >= n_blocks):
+            sink.add("RPA207",
+                     f"{tag}ids outside [0, {n_blocks}): min={int(row.min())} "
+                     f"max={int(row.max())} — an out-of-range id is an "
+                     f"out-of-bounds block gather", **loc)
+            continue
+        live = row[:c]
+        if live.size > 1 and not (np.diff(live) > 0).all():
+            sink.add("RPA207",
+                     f"{tag}ids[:cnt] not strictly increasing — a repeated "
+                     f"id double-accumulates its block, an unsorted one "
+                     f"breaks the compaction order the kernels assume",
+                     **loc)
+
+
+def schedule_ok(ids, cnt, n_blocks: int) -> bool:
+    """Boolean convenience wrapper (tests / REPL)."""
+    sink = DiagnosticSink()
+    check_schedule(ids, cnt, n_blocks, sink)
+    return not sink.items

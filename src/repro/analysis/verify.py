@@ -1,0 +1,46 @@
+"""verify_plan: THE entry point callers integrate against.
+
+- `verify_plan(plan, params=None, ...)` -> the full diagnostic list (the
+  CLI and telemetry consumers want everything, warns included);
+- `assert_plan_ok(...)` raises `PlanVerificationError` — a `ValueError`
+  subclass, so every existing `pytest.raises(ValueError, match=...)`
+  contract over the old `validate_plan` messages keeps holding — carrying
+  the error-severity diagnostics on `.diagnostics`.
+
+Hook points (DESIGN.md §12): `pipeline.planner.plan_network` asserts before
+returning a freshly planned schedule; `pipeline.planner.validate_plan` is
+now a thin wrapper (input-batch checks + this); `serving.plan_cache
+.PlanCache.get_or_compile` refuses to AOT-compile an erroring plan;
+`serving.engine.Engine.hot_swap` / re-plan adoption reject an erroring
+candidate atomically and keep serving the old plan.
+"""
+from __future__ import annotations
+
+from repro.analysis.diagnostics import errors, format_diagnostics
+from repro.analysis.plan import check_plan
+
+
+class PlanVerificationError(ValueError):
+    """An error-severity diagnostic in a plan. Subclasses ValueError so
+    callers that guarded the old validate_plan keep working unchanged."""
+
+    def __init__(self, diagnostics):
+        self.diagnostics = list(diagnostics)
+        super().__init__(format_diagnostics(self.diagnostics))
+
+
+def verify_plan(plan, params=None, *, graph=None, batch: int = 1) -> list:
+    """Statically verify a plan (and optionally its params). Returns every
+    diagnostic — errors, warns, infos; never raises. See `plan.check_plan`
+    for the check inventory."""
+    return check_plan(plan, params, graph=graph, batch=batch)
+
+
+def assert_plan_ok(plan, params=None, *, graph=None, batch: int = 1) -> list:
+    """`verify_plan`, raising `PlanVerificationError` on any error-severity
+    finding. Returns the (warn/info-only) diagnostics otherwise."""
+    diags = verify_plan(plan, params, graph=graph, batch=batch)
+    bad = errors(diags)
+    if bad:
+        raise PlanVerificationError(bad)
+    return diags

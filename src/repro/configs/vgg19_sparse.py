@@ -6,7 +6,7 @@ dry-run cells but has its own configs, smoke tests and benchmarks (Figs 9-12).
 `vgg19_graph` lowers a `CNNConfig` onto the LayerGraph IR — VGG-19 is one
 graph constructor among several (see `repro.configs.lenet` / `.alexnet`).
 """
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.configs.base import ModelConfig, register
 from repro.graph.ir import ConvSpec, DenseSpec, Flatten, LayerGraph, PoolSpec, ReLU

@@ -13,7 +13,6 @@ activations per convolution window. On TPU the profitable granularity is a
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp

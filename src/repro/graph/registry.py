@@ -67,6 +67,11 @@ class OpImpl:
              (used when a unit's pool is NOT fusion-eligible); for kind
              "conv", the kind-"conv_pool" impl it upgrades to when fusion IS
              eligible (None = never fuses).
+    launch:  f(unit, *, tile, block_c, batch) -> a resolved launch descriptor
+             (`repro.kernels.tiles.ConvLaunch` / `BsrLaunch`) describing the
+             Pallas grid this impl would run on `unit` — the geometry seam
+             the static checker (`repro.analysis.launch`) verifies WITHOUT
+             compiling. None for impls with no Pallas grid (XLA/jnp paths).
     """
 
     kind: str
@@ -78,6 +83,7 @@ class OpImpl:
     pallas: bool = False
     quantized: bool = False
     fused_with: str | None = None
+    launch: Callable | None = None
 
 
 _OPS: dict = {}
@@ -160,8 +166,8 @@ def unit_impl(unit: ConvUnit, impl: str) -> tuple:
 # measured CalibrationDB overrides per impl); these names stay re-exported so
 # benchmarks/_util, the dry-run and autotune keep one import site.
 from repro.obs.constants import (  # noqa: E402
-    DEFAULT_HBM_BW as HBM_BW,
-    DEFAULT_PEAK_FLOPS as PEAK_FLOPS,
+    DEFAULT_HBM_BW as HBM_BW,  # noqa: F401
+    DEFAULT_PEAK_FLOPS as PEAK_FLOPS,  # noqa: F401
     DEFAULT_ROOFLINE,
 )
 
@@ -224,6 +230,19 @@ def unit_model_us(kind: str, impl: str, unit: ConvUnit, *,
     consts = DEFAULT_ROOFLINE if calibration is None else \
         calibration.constants_for(kind, impl, block_c, tile=tile)
     return consts.time_us(cost["flops"], cost["bytes"])
+
+
+def unit_launch(kind: str, impl: str, unit: ConvUnit, *, tile=None,
+                block_c: int = 0, batch: int = 1):
+    """The resolved launch descriptor of executing `unit` as (kind, impl) —
+    None when the impl has no Pallas grid to describe. This is the registry's
+    geometry seam: the descriptor comes from the SAME builder the op's
+    forward resolves through, so `repro.analysis` verifies the grid that
+    would actually launch, never a re-derived approximation."""
+    op = get_op(kind, impl)
+    if op.launch is None:
+        return None
+    return op.launch(unit, tile=tile, block_c=block_c, batch=batch)
 
 
 # ---------------------------------------------------------------------------
@@ -339,22 +358,86 @@ def _bsr_int8_cost(c, h, w, o, kh, kw, **kw_args):
     return bsr_conv_int8_cost(c, h, w, o, kh, kw, **kw_args)
 
 
+# --- launch-descriptor adapters (OpImpl.launch): one per Pallas family ----
+
+
+def _padded_unit_dims(unit):
+    """(c, h, w, o, k, stride) of the kernel call `run_unit` makes for this
+    unit — h/w carry the ConvSpec padding the executor applies first."""
+    c, h, w = unit.in_shape
+    conv = unit.conv
+    return c, h + 2 * conv.pad, w + 2 * conv.pad, conv.c_out, conv.k, conv.stride
+
+
+def _launch_ecr(unit, *, tile=None, block_c=0, batch=1):
+    from repro.kernels.ecr_conv.ops import ecr_conv_launch
+    from repro.kernels.tiles import as_tile
+
+    c, h, w, o, k, stride = _padded_unit_dims(unit)
+    return ecr_conv_launch(c, h, w, o, k, k, stride=stride,
+                           tile=as_tile(tile, block_c), batch=batch)
+
+
+def _launch_pecr(unit, *, tile=None, block_c=0, batch=1):
+    from repro.kernels.conv_pool.ops import conv_pool_launch
+    from repro.kernels.tiles import as_tile
+
+    c, h, w, o, k, stride = _padded_unit_dims(unit)
+    return conv_pool_launch(c, h, w, o, k, k, stride=stride,
+                            pool=unit.pool.p if unit.pool is not None else 0,
+                            tile=as_tile(tile, block_c), batch=batch)
+
+
+def _bsr_unit_dims(unit, batch):
+    c, _, _, o, k, _ = _padded_unit_dims(unit)
+    _, oh, ow = unit.conv_out_shape
+    return o, c * k * k, batch * oh * ow
+
+
+def _launch_bsr(unit, *, tile=None, block_c=0, batch=1):
+    from repro.kernels.tiles import as_tile
+    from repro.sparse_weights.conv import bsr_conv_launch
+
+    o, k_taps, p = _bsr_unit_dims(unit, batch)
+    return bsr_conv_launch(o, k_taps, p, tile=as_tile(tile, block_c) or None)
+
+
+def _launch_ecr_int8(unit, *, tile=None, block_c=0, batch=1):
+    from repro.kernels.tiles import as_tile
+    from repro.quant.ops import ecr_conv_int8_launch
+
+    c, h, w, o, k, stride = _padded_unit_dims(unit)
+    return ecr_conv_int8_launch(c, h, w, o, k, k, stride=stride,
+                                tile=as_tile(tile, block_c), batch=batch)
+
+
+def _launch_bsr_int8(unit, *, tile=None, block_c=0, batch=1):
+    from repro.kernels.tiles import as_tile
+    from repro.quant.ops import bsr_conv_int8_launch
+
+    o, k_taps, p = _bsr_unit_dims(unit, batch)
+    return bsr_conv_int8_launch(o, k_taps, p, tile=as_tile(tile, block_c) or None)
+
+
 register_op(OpImpl("conv", "dense", _conv_dense, cost=_conv_cost))
 register_op(OpImpl("conv", "im2col", _conv_im2col, cost=_conv_cost))
 register_op(OpImpl("conv", "ecr", _conv_ecr, cost=_conv_cost, sparse=True,
                    fused_with="pecr"))
 register_op(OpImpl("conv", "ecr_pallas", _conv_ecr_pallas, cost=_conv_cost,
-                   sparse=True, pallas=True, fused_with="pecr_pallas"))
+                   sparse=True, pallas=True, fused_with="pecr_pallas",
+                   launch=_launch_ecr))
 register_op(OpImpl("conv", "bsr", _conv_bsr, cost=_bsr_cost,
-                   weight_sparse=True, pallas=True))
+                   weight_sparse=True, pallas=True, launch=_launch_bsr))
 register_op(OpImpl("conv", "ecr_int8", _conv_ecr_int8, cost=_ecr_int8_cost,
-                   sparse=True, pallas=True, quantized=True))
+                   sparse=True, pallas=True, quantized=True,
+                   launch=_launch_ecr_int8))
 register_op(OpImpl("conv", "bsr_int8", _conv_bsr_int8, cost=_bsr_int8_cost,
-                   weight_sparse=True, pallas=True, quantized=True))
+                   weight_sparse=True, pallas=True, quantized=True,
+                   launch=_launch_bsr_int8))
 register_op(OpImpl("conv_pool", "unfused", _conv_pool_unfused,
                    cost=_conv_pool_unfused_cost))
 register_op(OpImpl("conv_pool", "pecr", _conv_pool_pecr, cost=_conv_pool_cost,
                    sparse=True, fused_with="ecr"))
 register_op(OpImpl("conv_pool", "pecr_pallas", _conv_pool_pecr_pallas,
                    cost=_conv_pool_cost, sparse=True, pallas=True,
-                   fused_with="ecr_pallas"))
+                   fused_with="ecr_pallas", launch=_launch_pecr))

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.core.sparsity import block_occupancy
 from repro.kernels.bsr_matmul.kernel import bsr_matmul_pallas
+from repro.kernels.schedule_guard import guard_schedule
 
 
 def block_schedule(h: jax.Array, bt: int, bf: int):
@@ -41,7 +42,12 @@ def sparse_matmul(h, w, block=(8, 128, 128), interpret: bool = True,
     hp = jnp.pad(h, ((0, tp), (0, fp)))
     wp = jnp.pad(w, ((0, fp), (0, dp)))
     ids, cnt = block_schedule(hp, bt, bf)
-    y = bsr_matmul_pallas(hp, wp, ids, cnt, block=block, interpret=interpret)
+    ids, cnt = guard_schedule(ids, cnt, (f + fp) // bf)
+    # launch at the RESOLVED geometry — passing the default `block` here while
+    # padding/scheduling at the tile override was exactly the silent
+    # grid-vs-schedule mismatch repro.analysis' RPA101 check exists to catch
+    y = bsr_matmul_pallas(hp, wp, ids, cnt, block=(bt, bf, bd),
+                          interpret=interpret)
     return y[:t, :d]
 
 

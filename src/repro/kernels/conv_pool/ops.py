@@ -15,8 +15,24 @@ import jax.numpy as jnp
 
 from repro.core.sparsity import block_occupancy, compact_block_ids
 from repro.kernels.conv_pool.kernel import conv_pool_pallas, conv_pool_pallas_batch
-from repro.kernels.ecr_conv.ops import batch_block_schedule
-from repro.kernels.tiles import TileConfig, resolve_conv_tile
+from repro.kernels.ecr_conv.ops import batch_block_schedule, ecr_conv_launch
+from repro.kernels.schedule_guard import guard_schedule
+from repro.kernels.tiles import ConvLaunch, TileConfig
+
+
+def conv_pool_launch(c: int, h: int, w: int, o: int, kh: int = 3, kw: int = 3,
+                     *, stride: int = 1, pool: int = 2, block_c: int = 0,
+                     block_o: int = 0, tile: TileConfig | None = None,
+                     batch: int = 1, dtype_bytes: int = 4,
+                     kernel: str = "conv_pool", acc_dtype: str = "float32",
+                     weight_scales: str = "none") -> ConvLaunch:
+    """`ConvLaunch` descriptor of one fused PECR conv+ReLU+pool call — the
+    ECR builder with the pool window recorded, so the checker can verify the
+    fused epilogue tiles the conv output exactly (the kernel floors)."""
+    return ecr_conv_launch(c, h, w, o, kh, kw, stride=stride, block_c=block_c,
+                           block_o=block_o, tile=tile, batch=batch,
+                           dtype_bytes=dtype_bytes, pool=pool, kernel=kernel,
+                           acc_dtype=acc_dtype, weight_scales=weight_scales)
 
 
 @partial(jax.jit, static_argnames=("stride", "pool", "p_s", "interpret", "block_c", "block_o", "compact"))
@@ -38,11 +54,12 @@ def fused_conv_pool(x_chw, kernels_oihw, stride: int = 1, pool: int = 2,
     o, c2, kh, kw = kernels_oihw.shape
     # the ONE shared (bc, bo) defaulting rule (repro.kernels.tiles), not a
     # drifting copy of ecr_conv's — dtype_bytes rides the VMEM-budget pick
-    bc, bo = resolve_conv_tile(h, w, c, o,
-                               TileConfig(block_c=block_c, block_o=block_o),
-                               dtype_bytes=jnp.dtype(x_chw.dtype).itemsize)
-    cp, op = (-c) % bc, (-o) % bo
-    n_cb = (c + cp) // bc
+    launch = conv_pool_launch(c, h, w, o, kh, kw, stride=stride, pool=pool,
+                              block_c=block_c, block_o=block_o,
+                              batch=x_chw.shape[0] if batched else 1,
+                              dtype_bytes=jnp.dtype(x_chw.dtype).itemsize)
+    bc, bo = launch.block_c, launch.block_o
+    cp, op, n_cb = launch.c_pad, launch.o_pad, launch.n_cb
 
     if batched:
         assert x_chw.shape[0] > 0, "empty batch: fused_conv_pool needs N >= 1"
@@ -51,6 +68,7 @@ def fused_conv_pool(x_chw, kernels_oihw, stride: int = 1, pool: int = 2,
         x = jnp.pad(x_chw, ((0, 0), (0, cp), (0, 0), (0, 0))).transpose(0, 2, 3, 1)
         wk = jnp.pad(kernels_oihw, ((0, op), (0, cp), (0, 0), (0, 0))).transpose(2, 3, 1, 0)
         ids, cnt = batch_block_schedule(x, h, w, bc)
+        ids, cnt = guard_schedule(ids, cnt, n_cb)
         out = conv_pool_pallas_batch(
             x, wk, ids, cnt, stride=stride, pool=pool, block_c=bc, block_o=bo,
             interpret=interpret,
@@ -67,6 +85,7 @@ def fused_conv_pool(x_chw, kernels_oihw, stride: int = 1, pool: int = 2,
     else:
         occ = block_occupancy(x, (h, w, bc)).reshape(-1)
         ids, cnt = compact_block_ids(occ)
+    ids, cnt = guard_schedule(ids, cnt, n_cb)
     out = conv_pool_pallas(
         x, wk, ids, cnt[None], stride=stride, pool=pool, block_c=bc, block_o=bo,
         interpret=interpret,

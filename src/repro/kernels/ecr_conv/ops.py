@@ -14,12 +14,38 @@ import jax.numpy as jnp
 
 from repro.core.sparsity import block_occupancy, compact_block_ids
 from repro.kernels.ecr_conv.kernel import ecr_conv_pallas, ecr_conv_pallas_batch
-from repro.kernels.tiles import (  # noqa: F401  (re-exported legacy names)
-    VMEM_BUDGET_BYTES,
+from repro.kernels.schedule_guard import guard_schedule
+from repro.kernels.tiles import (
+    VMEM_BUDGET_BYTES,  # noqa: F401  (re-exported legacy name)
+    ConvLaunch,
     TileConfig,
-    pick_block_c as _pick_block_c,
+    pick_block_c as _pick_block_c,  # noqa: F401  (re-exported legacy name)
     resolve_conv_tile,
 )
+
+
+def ecr_conv_launch(c: int, h: int, w: int, o: int, kh: int = 3, kw: int = 3,
+                    *, stride: int = 1, block_c: int = 0, block_o: int = 0,
+                    tile: TileConfig | None = None, batch: int = 1,
+                    dtype_bytes: int = 4, pool: int = 0,
+                    kernel: str = "ecr_conv", acc_dtype: str = "float32",
+                    weight_scales: str = "none") -> ConvLaunch:
+    """The resolved `ConvLaunch` descriptor of one ECR conv call: block sizes
+    through `resolve_conv_tile` (exactly the resolution `ecr_conv` executes
+    with — the op reads its geometry back out of this record, so there is ONE
+    derivation), paddings/blocks/output dims derived once. `tile` wins over
+    the legacy (block_c, block_o) scalars; `pool`/`kernel`/`acc_dtype` are
+    pass-throughs for the fused and int8 variants that share this builder."""
+    t = tile if tile is not None else TileConfig(block_c=block_c, block_o=block_o)
+    bc, bo = resolve_conv_tile(h, w, c, o, t, dtype_bytes=dtype_bytes)
+    cp, op = (-c) % bc, (-o) % bo
+    return ConvLaunch(
+        kernel=kernel, batch=batch, c=c, h=h, w=w, o=o, kh=kh, kw=kw,
+        stride=stride, pool=pool, block_c=bc, block_o=bo, c_pad=cp, o_pad=op,
+        n_cb=(c + cp) // bc, n_ob=(o + op) // bo,
+        oh=(h - kh) // stride + 1, ow=(w - kw) // stride + 1,
+        dtype_bytes=dtype_bytes, acc_dtype=acc_dtype,
+        weight_scales=weight_scales)
 
 
 def batch_block_schedule(x_nhwc, h, w, bc):
@@ -50,11 +76,12 @@ def ecr_conv(x_chw, kernels_oihw, stride: int = 1, interpret: bool = True,
     batched = x_chw.ndim == 4
     c, h, w = x_chw.shape[-3:]
     o, c2, kh, kw = kernels_oihw.shape
-    bc, bo = resolve_conv_tile(h, w, c, o,
-                               TileConfig(block_c=block_c, block_o=block_o),
-                               dtype_bytes=jnp.dtype(x_chw.dtype).itemsize)
-    cp, op = (-c) % bc, (-o) % bo
-    n_cb = (c + cp) // bc
+    launch = ecr_conv_launch(c, h, w, o, kh, kw, stride=stride,
+                             block_c=block_c, block_o=block_o,
+                             batch=x_chw.shape[0] if batched else 1,
+                             dtype_bytes=jnp.dtype(x_chw.dtype).itemsize)
+    bc, bo = launch.block_c, launch.block_o
+    cp, op, n_cb = launch.c_pad, launch.o_pad, launch.n_cb
 
     if batched:
         assert x_chw.shape[0] > 0, "empty batch: ecr_conv needs N >= 1"
@@ -63,6 +90,7 @@ def ecr_conv(x_chw, kernels_oihw, stride: int = 1, interpret: bool = True,
         x = jnp.pad(x_chw, ((0, 0), (0, cp), (0, 0), (0, 0))).transpose(0, 2, 3, 1)
         wk = jnp.pad(kernels_oihw, ((0, op), (0, cp), (0, 0), (0, 0))).transpose(2, 3, 1, 0)
         ids, cnt = batch_block_schedule(x, h, w, bc)
+        ids, cnt = guard_schedule(ids, cnt, n_cb)
         out = ecr_conv_pallas_batch(
             x, wk, ids, cnt, stride=stride, block_c=bc, block_o=bo,
             interpret=interpret,
@@ -79,6 +107,7 @@ def ecr_conv(x_chw, kernels_oihw, stride: int = 1, interpret: bool = True,
     else:
         occ = block_occupancy(x, (h, w, bc)).reshape(-1)  # (n_cb,)
         ids, cnt = compact_block_ids(occ)
+    ids, cnt = guard_schedule(ids, cnt, n_cb)
     out = ecr_conv_pallas(
         x, wk, ids, cnt[None], stride=stride, block_c=bc, block_o=bo,
         interpret=interpret

@@ -122,6 +122,102 @@ def resolve_conv_tile(h: int, w: int, c: int, o: int,
     return bc, bo
 
 
+@dataclass(frozen=True)
+class ConvLaunch:
+    """Resolved launch geometry of one ECR / PECR conv kernel call.
+
+    Built by `ecr_conv_launch` / `conv_pool_launch` (and their int8 siblings)
+    from the SAME `resolve_conv_tile` resolution the op then executes with —
+    the ops read their block sizes and paddings back out of this record, so
+    the geometry the static checker (`repro.analysis.launch`) sees is by
+    construction the geometry the Pallas grid runs. All fields are stored
+    (not derived on access) so a corrupted descriptor is representable: the
+    checker re-derives every expectation from the primitive extents and
+    flags any disagreement.
+
+    c/h/w are the input extents as the kernel sees them (h/w already carry
+    the ConvSpec's spatial padding; c is pre-channel-pad), `pool` is the
+    fused pool window (0 = unfused), `acc_dtype`/`weight_scales` record the
+    accumulation/scale contract the int8 kernels must satisfy.
+    """
+
+    kernel: str  # "ecr_conv" | "conv_pool" | "ecr_conv_int8"
+    batch: int
+    c: int
+    h: int
+    w: int
+    o: int
+    kh: int
+    kw: int
+    stride: int
+    pool: int  # fused pool window (0 = no fused epilogue)
+    block_c: int
+    block_o: int
+    c_pad: int  # channel padding up to a block_c multiple
+    o_pad: int  # output-channel padding up to a block_o multiple
+    n_cb: int  # input-channel blocks = schedule length
+    n_ob: int  # output-channel blocks = grid dim 0
+    oh: int  # conv output spatial dims (pre-pool)
+    ow: int
+    dtype_bytes: int
+    acc_dtype: str = "float32"
+    weight_scales: str = "none"  # "none" | "per_output_channel"
+
+    @property
+    def grid(self) -> tuple:
+        """(n_ob, batch, n_cb) — the batched Pallas grid."""
+        return (self.n_ob, self.batch, self.n_cb)
+
+    @property
+    def x_tile_bytes(self) -> int:
+        """One (h, w, block_c) activation tile — the VMEM-budget governor
+        `pick_block_c` sizes against."""
+        return self.h * self.w * self.block_c * self.dtype_bytes
+
+    @property
+    def scratch_bytes(self) -> int:
+        """The (oh*ow, block_o) accumulator scratch (fp32/int32: 4 B)."""
+        return self.oh * self.ow * self.block_o * 4
+
+
+@dataclass(frozen=True)
+class BsrLaunch:
+    """Resolved launch geometry of one BSR matmul kernel call: a (t, f)
+    sparse left operand against (f, d), tiled (bt, bf, bd). Built by
+    `sparse_weights.conv.bsr_conv_launch` (t = output channels, f = K taps,
+    d = patches) from the same `resolve_bsr_tile` call the op executes with;
+    same stored-fields-vs-rederived-expectations contract as `ConvLaunch`."""
+
+    kernel: str  # "bsr_matmul" | "bsr_matmul_int8"
+    t: int
+    f: int
+    d: int
+    bt: int
+    bf: int
+    bd: int
+    t_pad: int
+    f_pad: int
+    d_pad: int
+    nt: int  # row blocks (per-row-block (ids, cnt) schedules)
+    nf: int  # reduction blocks = schedule width
+    nd: int  # column blocks
+    dtype_bytes: int
+    acc_dtype: str = "float32"
+    weight_scales: str = "none"
+
+    @property
+    def grid(self) -> tuple:
+        """(nt, nd, nf) — reduction innermost, like the kernel."""
+        return (self.nt, self.nd, self.nf)
+
+    @property
+    def tile_bytes(self) -> int:
+        """Resident VMEM per grid step: one block of each operand + the
+        (bt, bd) fp32/int32 accumulator scratch."""
+        operands = (self.bt * self.bf + self.bf * self.bd) * self.dtype_bytes
+        return operands + self.bt * self.bd * 4
+
+
 def resolve_bsr_tile(o: int, k_taps: int, p: int,
                      tile: TileConfig | None = None) -> tuple:
     """(bt, bf, bd) for the BSR conv lowering of an (O, K) weight against

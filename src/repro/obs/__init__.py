@@ -79,4 +79,5 @@ __all__ = [
     "search_layer",
     "tile_search",
     "time_callable",
+    "unit_shape_key",
 ]

@@ -312,6 +312,11 @@ def plan_network(
     if int8:
         plan = _probe_int8(plan, params, calib, fp32_alt, q_saving,
                            int8_budget)
+    # a freshly planned schedule must verify clean before anyone caches,
+    # compiles or serves it (DESIGN.md §12) — any error here is a planner bug
+    from repro.analysis import assert_plan_ok
+
+    assert_plan_ok(plan, params, graph=graph, batch=batch)
     return plan
 
 
@@ -370,58 +375,26 @@ def validate_plan(plan: PipelinePlan, params, imgs, graph=None) -> None:
     mismatched network executes silently and returns garbage logits. The
     serving engine depends on this contract: a plan only ever executes on the
     (C,H,W) it was calibrated for, against the params it was planned over.
+
+    The input-batch checks live here (only this call site has the images);
+    everything else — plan/graph/params invariants, fusion legality, launch
+    geometry, BSR density — is the static verifier's job (DESIGN.md §12):
+    `repro.analysis.assert_plan_ok`, which raises a `PlanVerificationError`
+    (a ValueError subclass) listing every error-severity diagnostic.
     """
+    from repro.analysis import assert_plan_ok
+
     if imgs.ndim not in (3, 4):
         raise ValueError(f"run_plan expects (C,H,W) or (N,C,H,W) images, got shape {tuple(imgs.shape)}")
     if not plan.layers:
         raise ValueError("run_plan got an empty PipelinePlan (no layers)")
-    if plan.block_c < 0:
-        raise ValueError(f"PipelinePlan.block_c must be >= 0 (0 = auto), got {plan.block_c}")
     in_shape = tuple(imgs.shape[-3:])
     if in_shape != tuple(plan.layers[0].in_shape):
         raise ValueError(
             f"plan was calibrated for input shape {tuple(plan.layers[0].in_shape)}, "
             f"got images of shape {in_shape}")
-    conv_ws, dense_ws = graph_weights(params)
-    if len(conv_ws) != len(plan.layers):
-        raise ValueError(
-            f"plan has {len(plan.layers)} conv layers but params carry "
-            f"{len(conv_ws)} conv weights (zip would silently truncate)")
-    import jax
-
-    for lp, w in zip(plan.layers, conv_ws):
-        if w.shape[1] != lp.in_shape[0]:
-            raise ValueError(
-                f"conv_{lp.index + 1}: plan expects C_in={lp.in_shape[0]}, "
-                f"weight has C_in={w.shape[1]}")
-        # a BSR layer only makes sense against the params it was planned
-        # over: running a density-0.3 schedule on unpruned (or differently
-        # pruned) weights would silently execute the wrong cost model and,
-        # worse, hide that the served model is not the pruned one. Weight
-        # VALUES are only visible outside a trace (the serving engine's AOT
-        # lowering abstracts them), so the check runs on every eager call —
-        # plan time, tests, direct run_plan — and is skipped under jit.
-        if get_op(lp.kind, lp.impl).weight_sparse and \
-                not isinstance(w, jax.core.Tracer):
-            from repro.sparse_weights import weight_block_density
-
-            d = weight_block_density(w)
-            if abs(d - lp.weight_density) > 0.1:
-                raise ValueError(
-                    f"conv_{lp.index + 1}: plan runs '{lp.impl}' at weight "
-                    f"block density {lp.weight_density:.2f} but the params "
-                    f"measure {d:.2f} — a BSR plan must execute with the "
-                    f"pruned params it was planned over (re-run plan_network)")
-    g = _plan_graph(plan, graph)
-    if len(g.units()) != len(plan.layers):
-        raise ValueError(
-            f"plan has {len(plan.layers)} layers but its graph has "
-            f"{len(g.units())} conv units (plan/graph mismatch)")
-    head = g.head()
-    if len(dense_ws) != len(head):
-        raise ValueError(
-            f"graph head has {len(head)} dense layers but params carry "
-            f"{len(dense_ws)} dense weights (zip would silently truncate)")
+    batch = int(imgs.shape[0]) if imgs.ndim == 4 else 1
+    assert_plan_ok(plan, params, graph=_plan_graph(plan, graph), batch=batch)
 
 
 def run_plan(plan: PipelinePlan, params, imgs, ccfg=None, *,

@@ -30,7 +30,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.tiles import TileConfig, resolve_bsr_tile, resolve_conv_tile
+from repro.kernels.schedule_guard import guard_schedule
+from repro.kernels.tiles import BsrLaunch, ConvLaunch, TileConfig
 from repro.quant.kernels import (
     bsr_matmul_int8_pallas,
     ecr_conv_int8_pallas,
@@ -50,6 +51,34 @@ class Int8Report:
     max_logit_drift: float  # max |planned - fp32 dense| over calib logits
     top1_agreement: float  # fraction of calib samples with unchanged argmax
     demoted: tuple = ()  # indices demoted back to fp32 to meet the budget
+
+
+def ecr_conv_int8_launch(c: int, h: int, w: int, o: int, kh: int = 3,
+                         kw: int = 3, *, stride: int = 1, block_c: int = 0,
+                         block_o: int = 0, tile: TileConfig | None = None,
+                         batch: int = 1) -> ConvLaunch:
+    """`ConvLaunch` of one int8 ECR conv call: the fp32 builder at
+    dtype_bytes=1 (int8 activations fit 4x wider channel blocks in the same
+    VMEM budget) with the int8 contract recorded — int32 accumulation,
+    per-output-channel weight scales — for the static checker to verify."""
+    from repro.kernels.ecr_conv.ops import ecr_conv_launch
+
+    return ecr_conv_launch(c, h, w, o, kh, kw, stride=stride, block_c=block_c,
+                           block_o=block_o, tile=tile, batch=batch,
+                           dtype_bytes=1, kernel="ecr_conv_int8",
+                           acc_dtype="int32",
+                           weight_scales="per_output_channel")
+
+
+def bsr_conv_int8_launch(o: int, k_taps: int, p: int, *,
+                         tile: TileConfig | None = None) -> BsrLaunch:
+    """`BsrLaunch` of one int8 BSR conv call (int32 accumulation, per-row =
+    per-output-channel weight scales delivered as (bt, 1) tiles)."""
+    from repro.sparse_weights.conv import bsr_conv_launch
+
+    return bsr_conv_launch(o, k_taps, p, tile=tile, dtype_bytes=1,
+                           kernel="bsr_matmul_int8", acc_dtype="int32",
+                           weight_scales="per_output_channel")
 
 
 @partial(jax.jit, static_argnames=("stride", "interpret", "block_c",
@@ -74,11 +103,11 @@ def ecr_conv_int8(x_chw, kernels_oihw, stride: int = 1, interpret: bool = True,
     batched = x_chw.ndim == 4
     c, h, w = x_chw.shape[-3:]
     o, c2, kh, kw = kernels_oihw.shape
-    bc, bo = resolve_conv_tile(h, w, c, o,
-                               TileConfig(block_c=block_c, block_o=block_o),
-                               dtype_bytes=1)
-    cp, op = (-c) % bc, (-o) % bo
-    n_cb = (c + cp) // bc
+    launch = ecr_conv_int8_launch(c, h, w, o, kh, kw, stride=stride,
+                                  block_c=block_c, block_o=block_o,
+                                  batch=x_chw.shape[0] if batched else 1)
+    bc, bo = launch.block_c, launch.block_o
+    cp, op, n_cb = launch.c_pad, launch.o_pad, launch.n_cb
 
     if batched:
         assert x_chw.shape[0] > 0, "empty batch: ecr_conv_int8 needs N >= 1"
@@ -89,6 +118,7 @@ def ecr_conv_int8(x_chw, kernels_oihw, stride: int = 1, interpret: bool = True,
         x = jnp.pad(xq, ((0, 0), (0, cp), (0, 0), (0, 0))).transpose(0, 2, 3, 1)
         wk = jnp.pad(wq, ((0, op), (0, cp), (0, 0), (0, 0))).transpose(2, 3, 1, 0)
         ids, cnt = batch_block_schedule(x, h, w, bc)
+        ids, cnt = guard_schedule(ids, cnt, n_cb)
         out = ecr_conv_int8_pallas_batch(
             x, wk, sx[:, None], jnp.pad(sw, (0, op), constant_values=1.0)[None],
             ids, cnt, stride=stride, block_c=bc, block_o=bo,
@@ -108,6 +138,7 @@ def ecr_conv_int8(x_chw, kernels_oihw, stride: int = 1, interpret: bool = True,
     else:
         occ = block_occupancy(x, (h, w, bc)).reshape(-1)
         ids, cnt = compact_block_ids(occ)
+    ids, cnt = guard_schedule(ids, cnt, n_cb)
     out = ecr_conv_int8_pallas(
         x, wk, sx.reshape(1, 1),
         jnp.pad(sw, (0, op), constant_values=1.0)[None],
@@ -157,15 +188,17 @@ def conv2d_bsr_int8(x, w, stride: int = 1, interpret: bool = True, tile=None):
     a = wins.reshape(n * oh * ow, k_taps)  # (P, K) patches
     wm = conv_weight_matrix(w).astype(jnp.float32)  # (O, K)
     p = a.shape[0]
-    bt, bf, bd = resolve_bsr_tile(o, k_taps, p, tile)
+    launch = bsr_conv_int8_launch(o, k_taps, p, tile=tile)
+    bt, bf, bd = launch.bt, launch.bf, launch.bd
     sw = absmax_scale(wm, axis=1)  # (O,) per-row = per-output-channel
     wm_q = quantize_int8(wm, sw[:, None])
     sa = absmax_scale(a)  # scalar, per-tensor patches
     a_q = quantize_int8(a, sa)
-    wm_p = jnp.pad(wm_q, ((0, (-o) % bt), (0, (-k_taps) % bf)))
-    at_p = jnp.pad(a_q, ((0, (-p) % bd), (0, (-k_taps) % bf))).T  # (Kp, Pp)
-    sw_p = jnp.pad(sw, (0, (-o) % bt), constant_values=1.0)[:, None]  # (Op,1)
+    wm_p = jnp.pad(wm_q, ((0, launch.t_pad), (0, launch.f_pad)))
+    at_p = jnp.pad(a_q, ((0, launch.d_pad), (0, launch.f_pad))).T  # (Kp, Pp)
+    sw_p = jnp.pad(sw, (0, launch.t_pad), constant_values=1.0)[:, None]  # (Op,1)
     ids, cnt = block_schedule(wm_p, bt, bf)
+    ids, cnt = guard_schedule(ids, cnt, launch.nf)
     yt = bsr_matmul_int8_pallas(wm_p, at_p, sw_p, sa.reshape(1, 1), ids, cnt,
                                 block=(bt, bf, bd), interpret=interpret)
     y = yt[:o, :p].T.reshape(n, oh, ow, o).transpose(0, 3, 1, 2)

@@ -204,6 +204,7 @@ class Engine:
         self.n_replans = 0
         self.replan_errors = 0
         self.n_hot_swaps = 0
+        self.verify_rejects = 0  # plans the static verifier refused to adopt
         self.n_batches = 0
         self.n_requests = 0
         self.n_pad_samples = 0
@@ -296,6 +297,7 @@ class Engine:
             "replans": self.n_replans,
             "replan_errors": self.replan_errors,
             "hot_swaps": self.n_hot_swaps,
+            "verify_rejects": self.verify_rejects,
             "plan_sparse": c["sparse"],
             "plan_dense": c["dense"],
             "plan_bsr": c["bsr"],
@@ -492,6 +494,8 @@ class Engine:
                 return
             new, self._pending_plan = self._pending_plan, None
         self._replanning = False
+        if not self._verify_candidate(new, self.params):
+            return  # erroring re-plan result: keep serving the current plan
         changed = plan_key(0, new) != plan_key(0, self.plan)
         if changed:
             self.n_replans += 1  # schedule changed; same-key swaps only re-center
@@ -500,8 +504,24 @@ class Engine:
         self._cooldown = self.replan_cooldown
         self.metrics.on_replan_swap(self.clock(), changed)
 
+    def _verify_candidate(self, plan, params) -> bool:
+        """Static gate on every plan-adoption path (DESIGN.md §12): any
+        error-severity diagnostic rejects the candidate BEFORE the engine
+        mutates anything — the reject is counted (stats()
+        ["verify_rejects"]), lands in the telemetry event stream, and
+        serving continues on the current plan/params."""
+        from repro.analysis import errors, verify_plan
+
+        bad = errors(verify_plan(plan, params, graph=self.graph))
+        if not bad:
+            return True
+        self.verify_rejects += 1
+        self.metrics.on_verify_reject(self.clock(),
+                                      tuple(d.code for d in bad))
+        return False
+
     def hot_swap(self, params, *, plan: PipelinePlan | None = None,
-                 calib=None) -> None:
+                 calib=None) -> bool:
         """Swap the SERVED MODEL under load — canonically to a
         differently-pruned BSR variant of the same graph (DESIGN.md §7: the
         weight signature in `PlanKey` keeps both variants' programs resident
@@ -514,7 +534,14 @@ class Engine:
         `calib` (default: the most recent real batch) at the current plan's
         occ_threshold/block_c. An in-flight background re-plan belongs to the
         OLD params — the generation bump makes its eventual result drop on
-        arrival instead of clobbering the swapped-in model."""
+        arrival instead of clobbering the swapped-in model.
+
+        Every candidate is statically verified against the NEW params before
+        anything mutates: an erroring (plan, params) pair is rejected
+        atomically — returns False, counts in stats()["verify_rejects"],
+        and the engine keeps serving the current model (a freshly planned
+        candidate raises from `plan_network` itself instead). Returns True
+        on a completed swap."""
         if plan is None:
             calib = self._calib_recent if calib is None else calib
             if calib is None:
@@ -529,6 +556,8 @@ class Engine:
                                     calibration=self.calibration,
                                     tiles=self.tiles, int8=self.int8,
                                     int8_budget=self.int8_budget)
+        elif not self._verify_candidate(plan, params):
+            return False
         with self._lock:
             self._plan_gen += 1
             self._pending_plan = None
@@ -540,6 +569,7 @@ class Engine:
         self._cooldown = self.replan_cooldown
         self.n_hot_swaps += 1
         self.metrics.on_hot_swap(self.clock())
+        return True
 
     def join_replan(self, timeout: float | None = 10.0) -> None:
         """Test/shutdown helper: wait for an in-flight background re-plan."""

@@ -122,6 +122,7 @@ class MetricsTracker:
         self.replan_swaps = 0
         self.replan_errors = 0
         self.hot_swaps = 0
+        self.verify_rejects = 0
 
     # -- engine hooks ------------------------------------------------------
 
@@ -168,6 +169,13 @@ class MetricsTracker:
         self.hot_swaps += 1
         self.replan_events.append({"t": float(t), "kind": "hot_swap"})
 
+    def on_verify_reject(self, t: float, codes=()) -> None:
+        """A candidate plan the static verifier refused (hot swap or re-plan
+        adoption): `codes` are the error diagnostic codes that fired."""
+        self.verify_rejects += 1
+        self.replan_events.append({"t": float(t), "kind": "verify_reject",
+                                   "codes": [str(c) for c in codes]})
+
     # -- rendering ---------------------------------------------------------
 
     def mean_fill(self) -> float:
@@ -190,5 +198,6 @@ class MetricsTracker:
             "replans": {"triggers": self.replan_triggers,
                         "swaps": self.replan_swaps,
                         "errors": self.replan_errors,
-                        "hot_swaps": self.hot_swaps},
+                        "hot_swaps": self.hot_swaps,
+                        "verify_rejects": self.verify_rejects},
         }

@@ -106,12 +106,23 @@ class PlanCache:
 
         `build` must return the AOT-compiled executable (it is only called on
         a miss, and exactly once per distinct key while the entry is resident).
+
+        A miss statically verifies the plan FIRST (DESIGN.md §12): AOT
+        compilation is the expensive step, and a plan with error-severity
+        diagnostics must never reach it (the raise is a
+        `PlanVerificationError`, before `build()` runs). Hits skip the check
+        — whatever is cached already verified. Tests that exercise the cache
+        mechanics with sentinel plans (None / no layers) are left alone.
         """
         if key in self._entries:
             self.hits += 1
             self._entries.move_to_end(key)
             return self._entries[key][0]
         self.misses += 1
+        if plan is not None and getattr(plan, "layers", None):
+            from repro.analysis import assert_plan_ok
+
+            assert_plan_ok(plan)
         exe = build()
         self.compiles += 1
         self._entries[key] = (exe, plan)

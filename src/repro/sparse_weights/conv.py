@@ -32,8 +32,26 @@ import jax.numpy as jnp
 from repro.core.sparsity import extract_windows
 from repro.kernels.bsr_matmul.kernel import bsr_matmul_pallas
 from repro.kernels.bsr_matmul.ops import block_schedule
-from repro.kernels.tiles import resolve_bsr_tile
+from repro.kernels.schedule_guard import guard_schedule
+from repro.kernels.tiles import BsrLaunch, resolve_bsr_tile
 from repro.sparse_weights.format import conv_weight_matrix
+
+
+def bsr_conv_launch(o: int, k_taps: int, p: int, *, tile=None,
+                    dtype_bytes: int = 4, kernel: str = "bsr_matmul",
+                    acc_dtype: str = "float32",
+                    weight_scales: str = "none") -> BsrLaunch:
+    """The resolved `BsrLaunch` descriptor of one conv2d_bsr call: the
+    (O, K) weight against (K, P) patches at `resolve_bsr_tile`'s geometry —
+    exactly the resolution the op executes with (it reads its block sizes
+    back out of this record), so the static checker sees the real grid."""
+    bt, bf, bd = resolve_bsr_tile(o, k_taps, p, tile)
+    tp, fp, dp = (-o) % bt, (-k_taps) % bf, (-p) % bd
+    return BsrLaunch(
+        kernel=kernel, t=o, f=k_taps, d=p, bt=bt, bf=bf, bd=bd,
+        t_pad=tp, f_pad=fp, d_pad=dp, nt=(o + tp) // bt,
+        nf=(k_taps + fp) // bf, nd=(p + dp) // bd, dtype_bytes=dtype_bytes,
+        acc_dtype=acc_dtype, weight_scales=weight_scales)
 
 
 def conv2d_bsr_ref(x, w, stride: int = 1):
@@ -73,10 +91,12 @@ def conv2d_bsr(x, w, stride: int = 1, interpret: bool = True, tile=None):
     a = wins.reshape(n * oh * ow, k_taps)  # (P, K) patches
     wm = conv_weight_matrix(w).astype(jnp.float32)  # (O, K)
     p = a.shape[0]
-    bt, bf, bd = resolve_bsr_tile(o, k_taps, p, tile)
-    wm_p = jnp.pad(wm, ((0, (-o) % bt), (0, (-k_taps) % bf)))
-    at_p = jnp.pad(a, ((0, (-p) % bd), (0, (-k_taps) % bf))).T  # (Kp, Pp)
+    launch = bsr_conv_launch(o, k_taps, p, tile=tile)
+    bt, bf, bd = launch.bt, launch.bf, launch.bd
+    wm_p = jnp.pad(wm, ((0, launch.t_pad), (0, launch.f_pad)))
+    at_p = jnp.pad(a, ((0, launch.d_pad), (0, launch.f_pad))).T  # (Kp, Pp)
     ids, cnt = block_schedule(wm_p, bt, bf)
+    ids, cnt = guard_schedule(ids, cnt, launch.nf)
     yt = bsr_matmul_pallas(wm_p, at_p, ids, cnt, block=(bt, bf, bd),
                            interpret=interpret)  # (Op, Pp) = y^T
     y = yt[:o, :p].T.reshape(n, oh, ow, o).transpose(0, 3, 1, 2)

@@ -10,8 +10,6 @@ from repro.core import (
     conv_pool,
     ecr_compress,
     ecr_spmv,
-    pecr_compress,
-    pecr_conv_pool,
     synth_feature_map,
     window_stats,
 )

@@ -123,7 +123,7 @@ def test_metrics_tracker_snapshot_counts_and_json():
     assert [e["kind"] for e in s["replan_events"]] == [
         "trigger", "swap", "error", "hot_swap"]
     assert s["replans"] == {"triggers": 1, "swaps": 1, "errors": 1,
-                            "hot_swaps": 1}
+                            "hot_swaps": 1, "verify_rejects": 0}
     json.dumps(s)  # the whole snapshot must be JSON-serializable verbatim
 
 

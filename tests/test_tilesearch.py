@@ -111,7 +111,7 @@ def test_tile_search_persists_only_pallas_winners(searched, plan):
     report, db = searched
     pallas_shapes = {r.shape_key for r in report.layers
                      if r.best.key != DEFAULT_TILE.key()}
-    for (dev, kind, impl, shape), tkey in db.tiles.items():
+    for (_dev, _kind, _impl, shape), tkey in db.tiles.items():
         assert shape in pallas_shapes and any(tkey)
 
 
