@@ -7,7 +7,6 @@ import os
 import time
 
 import jax
-import numpy as np
 
 from repro.core import synth_feature_map
 
@@ -19,15 +18,13 @@ from repro.graph.registry import HBM_BW, PEAK_FLOPS  # noqa: E402,F401
 
 
 def time_fn(f, *args, iters: int = 5, warmup: int = 2) -> float:
-    """Median wall time (us) of a jitted callable."""
-    for _ in range(warmup):
-        jax.block_until_ready(f(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(f(*args))
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts) * 1e6)
+    """Median wall time (us) of a jitted callable — a thin wrapper over
+    `repro.obs.profile.time_callable`, THE wall-time harness, so benchmark
+    rows, autotune candidates, and profile measurements all enter the
+    perf-history DB under one measurement discipline."""
+    from repro.obs.profile import time_callable
+
+    return time_callable(f, *args, iters=iters, warmup=warmup).median_us
 
 
 def dead_band_calib(graph, n: int, seed: int = 0, dead_frac: float = 0.5):
@@ -107,12 +104,27 @@ def jax_versions() -> dict:
     return out
 
 
+def device_info() -> dict:
+    """{"device_kind", "platform"} of the measuring device — stamped into
+    every BENCH_*.json next to the git SHA. The perf-history DB keys its
+    series on device_kind, so points from CPU-interpret runs and real-TPU
+    runs form disjoint baselines instead of merging into one."""
+    try:
+        dev = jax.devices()[0]
+        return {"device_kind": str(getattr(dev, "device_kind", dev.platform)),
+                "platform": str(dev.platform)}
+    except Exception:
+        return {"device_kind": "unknown", "platform": "unknown"}
+
+
 def write_bench_json(name: str, rows, out_dir: str = ".", extra: dict | None = None) -> str:
     """Write BENCH_<name>.json — the machine-readable twin of the CSV the
     benchmark modules print, so the perf trajectory is captured per run.
-    Every payload is stamped with the git SHA, a UTC timestamp and the
-    jax/jaxlib versions, so a BENCH artifact is attributable to the commit
-    AND the environment that produced it.
+    Every payload is stamped with the git SHA, a UTC timestamp, the
+    jax/jaxlib versions, and the device kind/platform, so a BENCH artifact
+    is attributable to the commit AND the environment that produced it —
+    and ingestible into the perf-history DB (`repro.obs.history`, DESIGN.md
+    §13) as typed per-device series.
 
     rows: list of dicts; each needs at least name/us_per_call (derived and any
     metric keys ride along verbatim). Returns the written path.
@@ -123,6 +135,7 @@ def write_bench_json(name: str, rows, out_dir: str = ".", extra: dict | None = N
                "git_sha": git_sha(),
                "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
                "versions": jax_versions(),
+               **device_info(),
                "rows": list(rows)}
     if extra:
         payload.update(extra)

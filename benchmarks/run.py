@@ -6,8 +6,14 @@ cross-platform story — see EXPERIMENTS.md §Paper-claims.
 
 ``--json [DIR]`` additionally writes one machine-readable BENCH_<module>.json
 per module (same rows), each stamped with the producing git SHA + UTC
-timestamp (see `_util.write_bench_json`), so every run appends an
-attributable point to the perf trajectory instead of scrolling away. The
+timestamp + device kind (see `_util.write_bench_json`), so every run appends
+an attributable point to the perf trajectory instead of scrolling away.
+``--history DB`` (requires ``--json``) goes one step further: after each
+module the freshly written BENCH files are ingested into the append-only
+perf-history DB (`repro.obs.history.BenchDB`, DESIGN.md §13) — dedup makes
+the per-module blanket re-scan free — so `repro-bench check` can gate the
+run against the rolling baselines and `repro-bench report` can render the
+cross-run trajectory. The
 serving benchmark (`serve_vgg19`) always writes its own
 BENCH_serve_vgg19.json and is part of the default set; the model-zoo smoke
 (`model_zoo`) runs the reduced LeNet/AlexNet/VGG graphs through the planned
@@ -70,7 +76,18 @@ def main() -> None:
                     help="run a single module (short name, e.g. fig9)")
     ap.add_argument("--json", nargs="?", const=".", default=None, metavar="DIR",
                     help="also write BENCH_<module>.json files (default: cwd)")
+    ap.add_argument("--history", default=None, metavar="DB",
+                    help="perf-history BenchDB (JSONL) to auto-ingest each "
+                         "module's BENCH json into (requires --json)")
     args = ap.parse_args()
+    if args.history and args.json is None:
+        ap.error("--history requires --json (the BENCH files are what gets "
+                 "ingested)")
+    history = None
+    if args.history:
+        from repro.obs.history import BenchDB
+
+        history = BenchDB(args.history)
 
     print("name,us_per_call,derived")
     for name, mod in modules:
@@ -93,7 +110,15 @@ def main() -> None:
             if not own_json:  # serving benchmarks already wrote richer json
                 _util.write_bench_json(name, _util.parse_csv_rows(buf.getvalue()),
                                        args.json)
-        print(f"_meta/{name}_wall_s,{(time.time()-t0)*1e6:.0f},benchmark module wall time")
+            if history is not None:
+                # blanket re-scan of the output dir: dedup skips everything
+                # already ingested, so only this module's fresh points land
+                n_new = sum(history.ingest_dir(args.json).values())
+                print(f"_meta/{name}_history,{n_new},points ingested into "
+                      f"{args.history}")
+        # wall time in SECONDS, as the name says (it was scaled 1e6 into
+        # microseconds before PR 10 while still claiming _wall_s)
+        print(f"_meta/{name}_wall_s,{time.time()-t0:.3f},benchmark module wall time (seconds)")
 
 
 if __name__ == "__main__":

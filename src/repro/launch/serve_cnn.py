@@ -29,6 +29,10 @@ Tile-geometry search + int8 quantized placement (DESIGN.md §10):
     PYTHONPATH=src python -m repro.launch.serve_cnn --tile-search \\
         --calib-out calibration.json
     PYTHONPATH=src python -m repro.launch.serve_cnn --int8
+Perf-history ingestion (DESIGN.md §13) — the serving summary + telemetry
+snapshot (and any fitted calibration) land as first-class series in the
+cross-run BenchDB, gate-able by `repro-bench check`:
+    PYTHONPATH=src python -m repro.launch.serve_cnn --history benchdb.jsonl
 """
 from __future__ import annotations
 
@@ -160,7 +164,8 @@ def serve_cnn(*, model: str = "vgg19", full: bool = False,
               scenario: str = "steady", seed: int = 0,
               trace_out: str | None = None, calibrate: bool = False,
               calib_out: str | None = None, tile_search: bool = False,
-              int8: bool = False, int8_budget: float = 0.98) -> dict:
+              int8: bool = False, int8_budget: float = 0.98,
+              history: str | None = None) -> dict:
     graph = serving_graph(model, full)
     params = shift_dead_channels(init_graph(jax.random.PRNGKey(seed), graph))
     # --devices 0 degrades like the Engine's auto policy (largest local
@@ -293,6 +298,30 @@ def serve_cnn(*, model: str = "vgg19", full: bool = False,
         tracer.save(trace_out)
         log.info("wrote %d trace events to %s (chrome://tracing / Perfetto)",
                  len(tracer.events), trace_out)
+    if history:
+        from repro.obs.history import (
+            BenchDB,
+            calibration_rows,
+            make_payload,
+            telemetry_rows,
+        )
+
+        db = BenchDB(history)
+        # the scalar serving summary + the engine's telemetry snapshot (and
+        # the fitted calibration scales, when one was produced this run)
+        # become first-class series next to the benchmark sweeps
+        rows = [{"name": f"serve/{graph.name}/{scenario}",
+                 **{k: v for k, v in summary.items()
+                    if isinstance(v, (int, float))
+                    and not isinstance(v, bool)}}]
+        rows += telemetry_rows(stats["telemetry"],
+                               prefix=f"telemetry/{graph.name}/{scenario}")
+        if calibration is not None:
+            rows += calibration_rows(calibration)
+        n_new = db.ingest_payload(make_payload("serve_cnn", rows))
+        log.info("perf history: %d point(s) ingested into %s "
+                 "(%d total, %d series)", n_new, history, len(db),
+                 len(db.series()))
     log.info("served %d requests (%s traffic) at %.0f req/s offered: "
              "%.1f req/s, p50=%.1fms p95=%.1fms, %d batches (fill %.2f), "
              "%d compiles / %d cache hits, %d replans, %d hot swaps",
@@ -360,6 +389,10 @@ def main():
     ap.add_argument("--int8-budget", type=float, default=0.98,
                     help="minimum top-1 agreement vs the fp32 oracle on the "
                          "calibration batch; int8 layers are demoted until met")
+    ap.add_argument("--history", default=None, metavar="DB",
+                    help="perf-history BenchDB (JSONL, DESIGN.md §13): "
+                         "ingest this run's serving summary + telemetry "
+                         "snapshot as cross-run series for repro-bench")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve_cnn(model=args.model, full=args.full, n_requests=args.n_requests,
@@ -371,7 +404,7 @@ def main():
               seed=args.seed, trace_out=args.trace_out,
               calibrate=args.calibrate, calib_out=args.calib_out,
               tile_search=args.tile_search, int8=args.int8,
-              int8_budget=args.int8_budget)
+              int8_budget=args.int8_budget, history=args.history)
 
 
 if __name__ == "__main__":

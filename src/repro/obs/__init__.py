@@ -24,14 +24,30 @@ the planner (DESIGN.md §9):
               candidate `TileConfig`s on the (re-measured-occupancy)
               roofline, wall-time the survivors, persist measured-best
               winners into the CalibrationDB tiles table for
-              `plan_network(tiles=...)` — closing measure -> search -> plan.
+              `plan_network(tiles=...)` — closing measure -> search -> plan;
+- `history`   the CROSS-RUN layer (DESIGN.md §13): `BenchDB` append-only
+              JSONL trajectory of every BENCH_*.json / telemetry /
+              profile / calibration point, noise-aware rolling-baseline
+              verdicts, and the `repro-bench` CLI whose `check` is the CI
+              regression gate.
 
-Entry points: `launch/serve_cnn.py --trace-out/--calibrate/--tile-search`,
-`benchmarks/cost_model.py` (predicted-vs-measured regression artifact),
-`benchmarks/kernels_micro.py` (tile-search sweep + floor),
-`Engine(tracer=..., calibration=...)` / `Engine.profile()`.
+Entry points: `launch/serve_cnn.py --trace-out/--calibrate/--tile-search/
+--history`, `benchmarks/cost_model.py` (predicted-vs-measured regression
+artifact), `benchmarks/kernels_micro.py` (tile-search sweep + floor),
+`benchmarks/run.py --history` (auto-ingest), `python -m
+repro.obs.history.cli` (repro-bench), `Engine(tracer=..., calibration=...)`
+/ `Engine.profile()`.
 """
 from repro.obs.calibrate import CalibEntry, CalibrationDB, device_kind, unit_shape_key
+from repro.obs.history import (
+    BenchDB,
+    Thresholds,
+    calibration_rows,
+    check_db,
+    make_payload,
+    profile_rows,
+    telemetry_rows,
+)
 from repro.obs.constants import (
     DEFAULT_HBM_BW,
     DEFAULT_PEAK_FLOPS,
@@ -57,6 +73,7 @@ from repro.obs.tilesearch import (
 from repro.obs.trace import NULL_TRACER, NullTracer, Tracer
 
 __all__ = [
+    "BenchDB",
     "CalibEntry",
     "CalibrationDB",
     "DEFAULT_HBM_BW",
@@ -69,14 +86,20 @@ __all__ = [
     "PROFILE_IMPLS",
     "ProfileReport",
     "RooflineConstants",
+    "Thresholds",
     "TileCandidate",
     "TileSearchReport",
     "TimingResult",
     "Tracer",
+    "calibration_rows",
+    "check_db",
     "device_kind",
     "layer_tile_candidates",
+    "make_payload",
     "profile_plan",
+    "profile_rows",
     "search_layer",
+    "telemetry_rows",
     "tile_search",
     "time_callable",
     "unit_shape_key",

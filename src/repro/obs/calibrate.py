@@ -260,6 +260,15 @@ class CalibrationDB:
                       tuple(row["shape"]))] = tuple(row["tile"])
         return db
 
+    def history_rows(self) -> list:
+        """The fitted entries as perf-history rows (scale + residual spread
+        per key) — `repro.obs.history.calibration_rows(self)`, so kernel
+        efficiency drift across commits is a gate-able BenchDB series
+        (DESIGN.md §13)."""
+        from repro.obs.history.records import calibration_rows
+
+        return calibration_rows(self)
+
     def summary(self) -> dict:
         """JSON-ready digest (scales per key) for logs and BENCH extras."""
         out = {f"{d}/{k}/{i}/{_fmt_tkey(tk)}": round(e.scale, 6)

@@ -1,0 +1,73 @@
+"""Perf history: the cross-run BENCH trajectory store and regression gate.
+
+Every benchmark module already emits a git-SHA/version-stamped
+``BENCH_*.json`` — one attributable perf point per run — but until this
+package nothing ever READ two of them side by side: the trajectory existed
+only as loose artifacts, so the paper's headline speedups were re-measured
+from scratch every session and regressions landed silently. This is the
+layer that turns those one-shot measurements into a monitored time series
+(DESIGN.md §13):
+
+- `db`        `BenchDB`: an append-only JSONL store (no new deps) of typed
+              per-(bench, row, metric, device_kind) series; each point
+              carries the producing git SHA, UTC timestamp, jax/jaxlib
+              versions, and device kind, so CPU-interpret and real-TPU
+              points never merge into one baseline;
+- `baseline`  noise-aware verdicts: rolling median + MAD over the series
+              window with minimum-sample guards, classifying each fresh
+              point as regressed / improved / flat per metric, at
+              per-noise-class thresholds (wall-clock metrics tolerate more
+              than deterministic counters/agreement scores);
+- `records`   exporters folding the OTHER measurement products into the
+              same record schema: `Engine.stats()["telemetry"]` snapshots,
+              `ProfileReport` per-impl ratio digests, `CalibrationDB`
+              fitted scales + residual spreads;
+- `report`    trend tables (terminal / markdown) and a static
+              self-contained HTML dashboard with inline SVG sparklines;
+- `cli`       `repro-bench` (`python -m repro.obs.history.cli`):
+              `ingest`, `diff <shaA> <shaB>`, `check` (nonzero exit on
+              regression — the CI gate), `report`.
+
+Entry points: `benchmarks/run.py --json DIR --history DB` auto-ingests
+after each module, `launch/serve_cnn.py --history DB` ingests the serving
+summary + telemetry snapshot, and CI's `bench-history` job restores the
+previous run's DB, ingests HEAD's BENCH files, and gates on
+`repro-bench check`.
+"""
+from repro.obs.history.baseline import (
+    Thresholds,
+    Verdict,
+    check_db,
+    classify,
+    diff_db,
+    metric_direction,
+    metric_noise_class,
+)
+from repro.obs.history.db import BenchDB, BenchRecord, payload_records, run_context
+from repro.obs.history.records import (
+    calibration_rows,
+    make_payload,
+    profile_rows,
+    telemetry_rows,
+)
+from repro.obs.history.report import html_report, trend_table
+
+__all__ = [
+    "BenchDB",
+    "BenchRecord",
+    "Thresholds",
+    "Verdict",
+    "calibration_rows",
+    "check_db",
+    "classify",
+    "diff_db",
+    "html_report",
+    "make_payload",
+    "metric_direction",
+    "metric_noise_class",
+    "payload_records",
+    "profile_rows",
+    "run_context",
+    "telemetry_rows",
+    "trend_table",
+]

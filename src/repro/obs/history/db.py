@@ -1,0 +1,247 @@
+"""BenchDB: the append-only JSONL store of cross-run benchmark points.
+
+One line per record, one record per (bench, row, metric) value of one run.
+JSONL because the write path must be append-only — the CI gate restores
+yesterday's DB, appends today's points, and re-uploads; a format that
+rewrites the whole file on ingest would turn every crash into data loss and
+every merge into a conflict. Plain JSON values, no new deps.
+
+The series key is (bench, row, metric, device_kind): `device_kind` is part
+of the key, not metadata, so points measured on CPU-interpret Pallas and on
+a real TPU form DISJOINT series — a CPU baseline can never absolve (or
+accuse) a TPU regression. Within a series, points are ordered by append
+position (`seq`): the log IS the clock. The stamped UTC timestamp rides
+along for humans and for `diff`, but second-granularity timestamps collide
+when two modules write in the same second, so ordering never depends on it.
+
+Identity/dedup: re-ingesting a file is a no-op — a record whose full
+payload (series key + run stamp + value) is already present is skipped, so
+`benchmarks/run.py --history` can blanket-ingest its output directory after
+every module and the CI job can re-ingest a restored artifact without
+double-counting points.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from dataclasses import dataclass, field
+
+SCHEMA = "benchdb-v1"
+
+# row keys that are labels/configuration echoes, not measurements
+_SKIP_KEYS = frozenset({"name", "derived", "layer", "index", "seed"})
+
+
+def run_context() -> dict:
+    """The stamp of the producing run — same fields `write_bench_json`
+    embeds in every BENCH payload, computed here for records built outside
+    the benchmark harness (telemetry snapshots, profile digests)."""
+    import subprocess
+
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=5)
+        sha = out.stdout.strip() if out.returncode == 0 else ""
+    except (OSError, subprocess.SubprocessError):
+        sha = ""
+    versions = {}
+    for mod in ("jax", "jaxlib"):
+        try:
+            versions[mod] = __import__(mod).__version__
+        except Exception:
+            versions[mod] = "unknown"
+    try:
+        import jax
+
+        dev = jax.devices()[0]
+        kind = getattr(dev, "device_kind", dev.platform)
+        platform = dev.platform
+    except Exception:
+        kind = platform = "unknown"
+    return {"git_sha": sha or "unknown",
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "versions": versions,
+            "device_kind": str(kind), "platform": str(platform)}
+
+
+@dataclass(frozen=True)
+class BenchRecord:
+    """One perf point: a (bench, row, metric) value stamped with the run
+    that produced it. `seq` is the append position in the DB (assigned on
+    load/ingest, not serialized) — the series order."""
+
+    bench: str
+    row: str
+    metric: str
+    value: float
+    git_sha: str
+    timestamp: str
+    jax: str
+    jaxlib: str
+    device_kind: str
+    platform: str
+    source: str = field(default="", compare=False)
+    seq: int = field(default=-1, compare=False)
+
+    @property
+    def series_key(self) -> tuple:
+        return (self.bench, self.row, self.metric, self.device_kind)
+
+    def identity(self) -> tuple:
+        """The dedup key: everything that makes this point THIS point.
+        `value` is included on purpose — a bit-identical rerun of the same
+        commit in the same second is the same point (skip), while a changed
+        measurement at the same stamp is a new one (keep)."""
+        return (self.bench, self.row, self.metric, self.value, self.git_sha,
+                self.timestamp, self.jax, self.jaxlib, self.device_kind,
+                self.platform)
+
+    def to_json(self) -> dict:
+        return {"bench": self.bench, "row": self.row, "metric": self.metric,
+                "value": self.value, "git_sha": self.git_sha,
+                "timestamp": self.timestamp, "jax": self.jax,
+                "jaxlib": self.jaxlib, "device_kind": self.device_kind,
+                "platform": self.platform, "source": self.source}
+
+    @classmethod
+    def from_json(cls, d: dict, seq: int = -1) -> "BenchRecord":
+        return cls(bench=str(d["bench"]), row=str(d["row"]),
+                   metric=str(d["metric"]), value=float(d["value"]),
+                   git_sha=str(d.get("git_sha", "unknown")),
+                   timestamp=str(d.get("timestamp", "")),
+                   jax=str(d.get("jax", "unknown")),
+                   jaxlib=str(d.get("jaxlib", "unknown")),
+                   device_kind=str(d.get("device_kind", "unknown")),
+                   platform=str(d.get("platform", "unknown")),
+                   source=str(d.get("source", "")), seq=seq)
+
+
+def payload_records(payload: dict, source: str = "") -> list:
+    """Flatten one BENCH_*.json payload (the `write_bench_json` shape) into
+    records: every numeric field of every row becomes one (bench, row,
+    metric) point stamped with the payload's run context. Bools, strings,
+    nested structures, and label keys are skipped — only measurements enter
+    the trajectory."""
+    bench = str(payload.get("name", "unknown"))
+    versions = payload.get("versions", {}) or {}
+    ctx = {
+        "git_sha": str(payload.get("git_sha", "unknown")),
+        "timestamp": str(payload.get("timestamp", "")),
+        "jax": str(versions.get("jax", "unknown")),
+        "jaxlib": str(versions.get("jaxlib", "unknown")),
+        # pre-PR-10 payloads lack the device stamp; their points land in an
+        # explicit "unknown" series rather than polluting a device baseline
+        "device_kind": str(payload.get("device_kind", "unknown")),
+        "platform": str(payload.get("platform", "unknown")),
+    }
+    out = []
+    for row in payload.get("rows", []):
+        if not isinstance(row, dict):
+            continue
+        rname = str(row.get("name", "?"))
+        for k, v in row.items():
+            if k in _SKIP_KEYS or isinstance(v, bool):
+                continue
+            if not isinstance(v, (int, float)):
+                continue
+            out.append(BenchRecord(bench=bench, row=rname, metric=str(k),
+                                   value=float(v), source=source, **ctx))
+    return out
+
+
+class BenchDB:
+    """The trajectory store: load-on-open, append-on-ingest, dedup always.
+
+    `path=None` gives an in-memory DB (tests, ad-hoc analysis); with a path
+    the file is created lazily with a one-line schema header and every
+    accepted record is appended immediately — two processes alternating
+    ingests never clobber each other's points.
+    """
+
+    def __init__(self, path: str | None = None):
+        self.path = path
+        self.records: list = []
+        self._ids: set = set()
+        if path and os.path.exists(path):
+            with open(path) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    d = json.loads(line)
+                    if "bench" not in d:  # schema header / future metadata
+                        continue
+                    self._absorb(BenchRecord.from_json(d))
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def _absorb(self, rec: BenchRecord) -> bool:
+        ident = rec.identity()
+        if ident in self._ids:
+            return False
+        self._ids.add(ident)
+        object.__setattr__(rec, "seq", len(self.records))
+        self.records.append(rec)
+        return True
+
+    def append(self, records) -> int:
+        """Dedup + append; accepted records are written through to the JSONL
+        file (when file-backed). Returns how many were new."""
+        fresh = [r for r in records if self._absorb(r)]
+        if fresh and self.path:
+            new_file = not os.path.exists(self.path) or \
+                os.path.getsize(self.path) == 0
+            os.makedirs(os.path.dirname(os.path.abspath(self.path)),
+                        exist_ok=True)
+            with open(self.path, "a") as f:
+                if new_file:
+                    f.write(json.dumps({"schema": SCHEMA}) + "\n")
+                for r in fresh:
+                    f.write(json.dumps(r.to_json(), sort_keys=True) + "\n")
+        return len(fresh)
+
+    # -- ingest ------------------------------------------------------------
+
+    def ingest_payload(self, payload: dict, source: str = "") -> int:
+        return self.append(payload_records(payload, source=source))
+
+    def ingest_file(self, path: str) -> int:
+        with open(path) as f:
+            payload = json.load(f)
+        if not isinstance(payload, dict) or "rows" not in payload:
+            raise ValueError(f"{path}: not a BENCH payload (no 'rows')")
+        return self.ingest_payload(payload, source=os.path.basename(path))
+
+    def ingest_dir(self, dirpath: str) -> dict:
+        """Ingest every BENCH_*.json under `dirpath`; {filename: n_new}.
+        Dedup makes this safe to call repeatedly over the same directory —
+        the `benchmarks/run.py --history` per-module hook does exactly that."""
+        out = {}
+        for p in sorted(glob.glob(os.path.join(dirpath, "BENCH_*.json"))):
+            out[os.path.basename(p)] = self.ingest_file(p)
+        return out
+
+    # -- views -------------------------------------------------------------
+
+    def series(self) -> dict:
+        """{(bench, row, metric, device_kind): [BenchRecord, ...]} in append
+        order — the trajectory, one list per typed series."""
+        out: dict = {}
+        for r in self.records:
+            out.setdefault(r.series_key, []).append(r)
+        return out
+
+    def shas(self) -> list:
+        """Distinct git SHAs in first-appearance order."""
+        seen: dict = {}
+        for r in self.records:
+            seen.setdefault(r.git_sha, None)
+        return list(seen)
+
+    def latest_sha(self) -> str | None:
+        """The SHA of the most recently appended record — `check`'s default
+        candidate run."""
+        return self.records[-1].git_sha if self.records else None

@@ -192,6 +192,15 @@ class ProfileReport:
             rows.append(replace(t, predicted_us=pred))
         return replace(self, timings=tuple(rows))
 
+    def history_rows(self) -> list:
+        """This report as perf-history rows (per-impl ratio medians +
+        ranking agreement) — `repro.obs.history.profile_rows(self)`, so a
+        profile run lands in the cross-run BenchDB next to the benchmark
+        sweeps (DESIGN.md §13)."""
+        from repro.obs.history.records import profile_rows
+
+        return profile_rows(self)
+
     def summary(self) -> dict:
         """JSON-ready digest for `Engine.stats()["telemetry"]["profile"]`."""
         per_impl = {}

@@ -24,6 +24,12 @@ Determinism contract: on a `SimClock` with a fixed service-time model
 snapshots — tests/test_scenarios.py pins this, which is what makes BENCH
 JSON diffs meaningful rather than noise.
 
+Cross-run trajectory: `repro.obs.history.telemetry_rows(snapshot)` renders
+the scalar half of a snapshot as perf-history rows (DESIGN.md §13), so the
+serving health of every run — p50/p95/p99, fill, re-plan counters — is a
+first-class BenchDB series `repro-bench check` gates on
+(`launch/serve_cnn.py --history` is the wired entry point).
+
 All timestamps are whatever the engine's clock reads (simulated seconds for
 SimClock replays, `time.monotonic` live). Timelines and event logs are
 bounded deques: a long-lived engine keeps the most recent `timeline_max`

@@ -1,0 +1,405 @@
+"""Perf-history subsystem (repro.obs.history, DESIGN.md §13).
+
+Pins the acceptance contract of the `repro-bench` CI gate: over two
+ingested runs of the benchmark harness's payloads, `check` exits 0 on a
+bit-identical rerun and nonzero on a seeded synthetic regression — plus
+the store's append-only/dedup discipline, the noise-aware classification
+(rolling median + MAD, min-sample guards, per-class thresholds), the
+`write_bench_json`/`parse_csv_rows` round trip with the device stamp, and
+the telemetry/profile/calibration exporters into the same record schema.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from benchmarks._util import parse_csv_rows, write_bench_json
+from repro.obs.history import (
+    BenchDB,
+    Thresholds,
+    calibration_rows,
+    check_db,
+    classify,
+    diff_db,
+    html_report,
+    make_payload,
+    metric_direction,
+    metric_noise_class,
+    payload_records,
+    telemetry_rows,
+    trend_table,
+)
+from repro.obs.history.cli import main as cli_main
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def bench_payload(sha="aaa1111", ts="2026-01-01T00:00:00Z", us=1000.0,
+                  p50=2.0, name="model_zoo", device="cpu"):
+    """A payload in exactly the `write_bench_json` shape `benchmarks/run.py
+    --json` emits (git SHA + timestamp + versions + device stamp + rows)."""
+    return {"name": name, "schema": "name,us_per_call,derived",
+            "git_sha": sha, "timestamp": ts,
+            "versions": {"jax": "0.9", "jaxlib": "0.9"},
+            "device_kind": device, "platform": device,
+            "rows": [
+                {"name": "zoo/lenet/sparse", "us_per_call": us,
+                 "p50_ms": p50, "throughput_rps": 100.0,
+                 "derived": "batch=2"},
+                {"name": "zoo/lenet/dense", "us_per_call": us * 2,
+                 "derived": "batch=2"},
+            ]}
+
+
+# -- store -------------------------------------------------------------------
+
+
+def test_ingest_and_series_typing(tmp_path):
+    db = BenchDB(str(tmp_path / "db.jsonl"))
+    n = db.ingest_payload(bench_payload())
+    # us_per_call + p50_ms + throughput_rps on row 1, us_per_call on row 2;
+    # "derived"/"name" (strings) never become series
+    assert n == 4
+    keys = set(db.series())
+    assert ("model_zoo", "zoo/lenet/sparse", "p50_ms", "cpu") in keys
+    assert all(k[3] == "cpu" for k in keys)
+
+
+def test_device_kind_separates_baselines(tmp_path):
+    """CPU-interpret and TPU points must form disjoint series — a TPU run
+    never lands on (or gates against) the CPU baseline."""
+    db = BenchDB(str(tmp_path / "db.jsonl"))
+    db.ingest_payload(bench_payload(device="cpu"))
+    db.ingest_payload(bench_payload(sha="bbb2222", ts="2026-01-02T00:00:00Z",
+                                    us=99999.0, device="TPU v5e"))
+    series = db.series()
+    key_cpu = ("model_zoo", "zoo/lenet/sparse", "us_per_call", "cpu")
+    key_tpu = ("model_zoo", "zoo/lenet/sparse", "us_per_call", "TPU v5e")
+    assert len(series[key_cpu]) == 1 and len(series[key_tpu]) == 1
+    # and the fresh TPU point has no CPU baseline: no-baseline, not regressed
+    verdicts = {v.metric: v for v in check_db(db)}
+    assert verdicts["us_per_call"].status == "no-baseline"
+
+
+def test_dedupe_and_reload(tmp_path):
+    path = str(tmp_path / "db.jsonl")
+    db = BenchDB(path)
+    assert db.ingest_payload(bench_payload()) == 4
+    assert db.ingest_payload(bench_payload()) == 0  # identical: all dups
+    db2 = BenchDB(path)  # JSONL round trip preserves everything
+    assert len(db2) == 4
+    assert db2.ingest_payload(bench_payload()) == 0
+    assert db2.records[0].identity() == db.records[0].identity()
+    # append-only: the file starts with the schema header line
+    first = open(path).readline()
+    assert json.loads(first)["schema"] == "benchdb-v1"
+
+
+def test_payload_records_skips_labels_and_nonscalars():
+    payload = bench_payload()
+    payload["rows"][0].update({"layer": 3, "seed": 0, "flag": True,
+                               "nested": {"a": 1}, "note": "text"})
+    recs = payload_records(payload)
+    metrics = {r.metric for r in recs}
+    assert "layer" not in metrics and "seed" not in metrics
+    assert "flag" not in metrics and "nested" not in metrics
+    assert "us_per_call" in metrics
+
+
+# -- classification ----------------------------------------------------------
+
+
+def test_metric_direction_and_noise_class():
+    assert metric_direction("us_per_call") == -1
+    assert metric_direction("p99_ms") == -1
+    assert metric_direction("service_s_total") == -1
+    assert metric_direction("throughput_rps") == 1
+    assert metric_direction("speedup") == 1
+    assert metric_direction("top1_agreement") == 1
+    assert metric_direction("batches") == 0  # tracked, never gated
+    assert metric_noise_class("p50_ms") == "noisy"
+    assert metric_noise_class("top1_agreement") == "exact"
+    assert metric_noise_class("stream_compiles") == "exact"
+
+
+def test_classify_flat_on_identical_and_min_samples_guard():
+    th = Thresholds()
+    assert classify([100.0], 100.0, "us_per_call", th).status == "flat"
+    guard = Thresholds(min_samples=3)
+    v = classify([100.0, 100.0], 100.0, "us_per_call", guard)
+    assert v.status == "no-baseline"  # guarded: too little history to judge
+
+
+def test_classify_regressed_improved_directions():
+    th = Thresholds(rel_noisy=0.5)
+    assert classify([100.0], 200.0, "us_per_call", th).status == "regressed"
+    assert classify([100.0], 40.0, "us_per_call", th).status == "improved"
+    # higher-is-better flips the sign
+    assert classify([100.0], 40.0, "throughput_rps", th).status == "regressed"
+    assert classify([100.0], 200.0, "throughput_rps", th).status == "improved"
+
+
+def test_mad_widens_band_on_noisy_history():
+    """A series whose history is noisy earns a wider band: the same +36%
+    excursion that trips a tight relative threshold on quiet history is
+    absorbed by the MAD term on jittery history."""
+    th = Thresholds(rel_noisy=0.10, mad_k=4.0)
+    quiet = [100.0, 101.0, 99.0, 100.0]
+    noisy = [100.0, 140.0, 80.0, 120.0]
+    assert classify(quiet, 136.0, "us_per_call", th).status == "regressed"
+    assert classify(noisy, 136.0, "us_per_call", th).status == "flat"
+
+
+def test_mad_needs_minimum_samples():
+    """The MAD of two points is just half their gap, so one noisy early
+    pair must not widen the band enough to swallow a real cliff: with only
+    two priors the relative term alone gates (a 3x jump over a 509/299
+    pair regresses), while the same spread across >= mad_min_samples
+    priors legitimately earns the wide MAD band."""
+    th = Thresholds()  # rel_noisy=0.5, mad_k=4.0, mad_min_samples=3
+    assert classify([509.9, 299.0], 897.0, "us_per_call", th).status \
+        == "regressed"
+    # four priors with the same spread: the MAD term engages and absorbs it
+    assert classify([509.9, 299.0, 510.0, 300.0], 897.0, "us_per_call",
+                    th).status == "flat"
+    # the guard is configurable: demanding 5 priors re-tightens the band
+    tight = Thresholds(mad_min_samples=5)
+    assert classify([509.9, 299.0, 510.0, 300.0], 897.0, "us_per_call",
+                    tight).status == "regressed"
+
+
+def test_exact_metrics_gate_tight():
+    """Deterministic metrics (agreement scores) regress on small moves the
+    noisy class would absorb."""
+    v = classify([1.0, 1.0, 1.0], 0.9, "top1_agreement", Thresholds())
+    assert v.status == "regressed"
+
+
+# -- the acceptance contract: two runs, flat vs seeded regression ------------
+
+
+def test_identical_rerun_is_flat_exit0(tmp_path):
+    db_path = str(tmp_path / "db.jsonl")
+    f1 = tmp_path / "BENCH_a.json"
+    f2 = tmp_path / "BENCH_b.json"
+    f1.write_text(json.dumps(bench_payload()))
+    f2.write_text(json.dumps(bench_payload(ts="2026-01-02T00:00:00Z")))
+    assert cli_main(["ingest", "--db", db_path, str(f1)]) == 0
+    assert cli_main(["check", "--db", db_path, str(f2)]) == 0
+    verdicts = check_db(BenchDB(db_path))
+    gated = [v for v in verdicts if v.status not in ("ungated",)]
+    assert gated and all(v.status == "flat" for v in gated)
+
+
+def test_seeded_regression_exits_nonzero(tmp_path):
+    """The mutation test: perturb ONE metric beyond threshold and the gate
+    must trip — and name the right series."""
+    db_path = str(tmp_path / "db.jsonl")
+    base = bench_payload()
+    bad = bench_payload(ts="2026-01-02T00:00:00Z")
+    bad["rows"][0]["p50_ms"] *= 3.0  # >> rel_noisy=0.5
+    f1 = tmp_path / "BENCH_a.json"
+    f2 = tmp_path / "BENCH_b.json"
+    f1.write_text(json.dumps(base))
+    f2.write_text(json.dumps(bad))
+    assert cli_main(["ingest", "--db", db_path, str(f1)]) == 0
+    assert cli_main(["check", "--db", db_path, str(f2)]) == 1
+    verdicts = check_db(BenchDB(db_path))
+    regressed = [v for v in verdicts if v.status == "regressed"]
+    assert [(v.row, v.metric) for v in regressed] == \
+        [("zoo/lenet/sparse", "p50_ms")]
+
+
+def test_check_cli_process_level(tmp_path):
+    """The literal CI invocation: `python -m repro.obs.history.cli check`
+    exit codes observed at the process boundary."""
+    db_path = str(tmp_path / "db.jsonl")
+    f1 = tmp_path / "BENCH_a.json"
+    f1.write_text(json.dumps(bench_payload()))
+    bad = bench_payload(ts="2026-01-02T00:00:00Z")
+    bad["rows"][1]["us_per_call"] *= 10.0
+    f2 = tmp_path / "BENCH_b.json"
+    f2.write_text(json.dumps(bad))
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join([os.path.abspath(SRC),
+                                           os.path.abspath(ROOT)]))
+
+    def run(*args):
+        return subprocess.run(
+            [sys.executable, "-m", "repro.obs.history.cli", *args],
+            capture_output=True, text=True, env=env, timeout=120)
+
+    r = run("check", "--db", db_path, str(f1))
+    assert r.returncode == 0, r.stderr  # first run: no baseline yet
+    r = run("check", "--db", db_path, str(f2), "--json")
+    assert r.returncode == 1, r.stderr
+    report = json.loads(r.stdout)
+    assert report["regressed"] == 1
+    assert any(v["status"] == "regressed" and v["metric"] == "us_per_call"
+               for v in report["verdicts"])
+
+
+def test_check_threshold_flags(tmp_path):
+    """--rel-noisy reshapes the gate: a +30% move regresses at 0.1 and
+    passes at 0.5."""
+    db_path = str(tmp_path / "db.jsonl")
+    f1 = tmp_path / "BENCH_a.json"
+    f2 = tmp_path / "BENCH_b.json"
+    bad = bench_payload(ts="2026-01-02T00:00:00Z")
+    bad["rows"][0]["us_per_call"] *= 1.3
+    f1.write_text(json.dumps(bench_payload()))
+    f2.write_text(json.dumps(bad))
+    assert cli_main(["ingest", "--db", db_path, str(f1), str(f2)]) == 0
+    assert cli_main(["check", "--db", db_path, "--rel-noisy", "0.5"]) == 0
+    assert cli_main(["check", "--db", db_path, "--rel-noisy", "0.1"]) == 1
+
+
+def test_check_skips_stale_series(tmp_path):
+    """A bench that did NOT re-run this time has no fresh evidence: its
+    series must not be judged against the candidate SHA."""
+    db = BenchDB(str(tmp_path / "db.jsonl"))
+    db.ingest_payload(bench_payload(name="old_bench"))
+    db.ingest_payload(bench_payload(sha="bbb2222",
+                                    ts="2026-01-02T00:00:00Z",
+                                    name="fresh_bench", us=5000.0))
+    verdicts = check_db(db, sha="bbb2222")
+    assert verdicts and all(v.bench == "fresh_bench" for v in verdicts)
+
+
+# -- diff --------------------------------------------------------------------
+
+
+def test_diff_between_shas(tmp_path):
+    db = BenchDB(str(tmp_path / "db.jsonl"))
+    db.ingest_payload(bench_payload(sha="aaa1111"))
+    db.ingest_payload(bench_payload(sha="bbb2222",
+                                    ts="2026-01-02T00:00:00Z", us=2000.0))
+    rows = diff_db(db, "aaa1111", "bbb2222")
+    by = {(r["row"], r["metric"]): r for r in rows}
+    r = by[("zoo/lenet/sparse", "us_per_call")]
+    assert r["a"] == 1000.0 and r["b"] == 2000.0
+    assert r["rel_delta"] == pytest.approx(1.0)
+    assert r["better"] is False  # lower-is-better metric got worse
+    same = by[("zoo/lenet/sparse", "throughput_rps")]
+    assert same["better"] is None  # unchanged
+
+
+# -- write_bench_json / parse_csv_rows round trip + device stamp -------------
+
+
+def test_write_bench_json_roundtrip_and_device_stamp(tmp_path):
+    csv = ("name,us_per_call,derived\n"
+           "fig9/conv_1,123.4,speedup=2.0\n"
+           "_meta/fig9_wall_s,1.5,module wall time (seconds)\n"
+           "bogus-line\n")
+    rows = parse_csv_rows(csv)
+    assert rows == [{"name": "fig9/conv_1", "us_per_call": 123.4,
+                     "derived": "speedup=2.0"}]
+    path = write_bench_json("roundtrip", rows, str(tmp_path))
+    payload = json.load(open(path))
+    # the run stamp: SHA + timestamp + versions + device (satellite: the
+    # device stamp keeps CPU and TPU baselines apart in the history DB)
+    for key in ("git_sha", "timestamp", "versions", "device_kind",
+                "platform"):
+        assert key in payload, key
+    assert payload["platform"] != "unknown"
+    db = BenchDB(str(tmp_path / "db.jsonl"))
+    assert db.ingest_file(path) == 1
+    ((key, recs),) = db.series().items()
+    assert key[:3] == ("roundtrip", "fig9/conv_1", "us_per_call")
+    assert recs[0].value == 123.4
+    assert recs[0].device_kind == payload["device_kind"]
+
+
+def test_ingest_rejects_non_bench_json(tmp_path):
+    p = tmp_path / "BENCH_bad.json"
+    p.write_text(json.dumps({"not": "a payload"}))
+    with pytest.raises(ValueError):
+        BenchDB(str(tmp_path / "db.jsonl")).ingest_file(str(p))
+    assert cli_main(["ingest", "--db", str(tmp_path / "db.jsonl"),
+                     str(p)]) == 2
+
+
+# -- exporters: telemetry / profile / calibration ----------------------------
+
+
+def test_telemetry_rows_schema():
+    snapshot = {"submitted": 10, "completed": 10, "batches": 4,
+                "pad_samples": 2, "mean_fill": 0.75, "service_s_total": 0.1,
+                "latency": {"count": 10, "mean_ms": 2.0, "max_ms": 5.0,
+                            "p50_ms": 1.5, "p95_ms": 4.0, "p99_ms": 5.0},
+                "replans": {"triggers": 1, "swaps": 1, "errors": 0,
+                            "hot_swaps": 0, "verify_rejects": 0},
+                "occ_timeline": [[0.0, [0.5]]], "replan_events": []}
+    (row,) = telemetry_rows(snapshot, prefix="telemetry/vgg/steady")
+    assert row["name"] == "telemetry/vgg/steady"
+    assert row["p95_ms"] == 4.0 and row["replan_swaps"] == 1
+    # only scalars — the timelines stay out of the trajectory
+    assert all(not isinstance(v, (list, dict)) for v in row.values())
+    recs = payload_records(make_payload("serving", [row]))
+    assert {r.metric for r in recs} >= {"p50_ms", "p99_ms", "mean_fill",
+                                        "replan_triggers"}
+
+
+def test_profile_and_calibration_rows():
+    from repro.obs.calibrate import CalibEntry, CalibrationDB
+    from repro.obs.profile import LayerTiming, ProfileReport
+
+    timings = tuple(
+        LayerTiming(index=i, kind="conv", impl=impl, occupancy=0.5,
+                    weight_density=1.0, batch=2, block_c=8,
+                    measured_us=100.0 * (i + 1), spread=0.1,
+                    predicted_us=50.0 * (i + 1), flops=1e6, bytes=1e4)
+        for i, impl in ((0, "dense"), (0, "ecr_pallas"), (1, "dense")))
+    report = ProfileReport(graph_name="lenet", device_kind="cpu", batch=2,
+                           block_c=8, timings=timings)
+    rows = report.history_rows()
+    names = [r["name"] for r in rows]
+    assert "profile/lenet/conv/dense" in names
+    assert "profile/lenet/agreement" in names
+    agr = rows[-1]
+    assert 0.0 <= agr["top1_agreement"] <= 1.0
+    db = CalibrationDB(device="cpu")
+    db.put("conv", "dense", 8, CalibEntry(peak_flops=1e12, hbm_bw=1e11,
+                                          scale=0.5, n_samples=3,
+                                          resid_spread=0.2))
+    (crow,) = calibration_rows(db)
+    assert crow["name"] == "calib/cpu/conv/dense/bc8"
+    assert crow["scale"] == 0.5 and crow["resid_spread"] == 0.2
+    # both exporters land in the same record schema
+    recs = payload_records(make_payload("obs", rows + [crow]))
+    assert {r.metric for r in recs} >= {"ratio_median", "top1_agreement",
+                                        "scale", "resid_spread"}
+
+
+# -- rendering ---------------------------------------------------------------
+
+
+def test_trend_table_and_html_report(tmp_path):
+    db = BenchDB(str(tmp_path / "db.jsonl"))
+    db.ingest_payload(bench_payload())
+    db.ingest_payload(bench_payload(sha="bbb2222",
+                                    ts="2026-01-02T00:00:00Z", us=3000.0))
+    table = trend_table(db)
+    assert "zoo/lenet/sparse/us_per_call" in table
+    assert "regressed" in table
+    md = trend_table(db, markdown=True)
+    assert md.startswith("| series |")
+    html = html_report(db)
+    assert html.startswith("<!doctype html>")
+    assert "<svg" in html and "regressed" in html
+    assert "src=" not in html  # self-contained: no external assets
+    out = tmp_path / "report.html"
+    assert cli_main(["report", "--db", str(db.path), "--html",
+                     str(out)]) == 0
+    assert out.read_text().startswith("<!doctype html>")
+
+
+def test_benchdb_gitignored():
+    """The DB is a CI artifact, not a tracked file — a stray local
+    benchdb.jsonl must not show up in git status."""
+    gitignore = open(os.path.join(ROOT, ".gitignore")).read()
+    assert "benchdb" in gitignore or "*.jsonl" in gitignore
